@@ -1,0 +1,131 @@
+"""Roofline analysis from the dry-run artifacts (TPU v5e targets).
+
+Per (arch x shape x mesh):
+    compute term    = HLO_flops_per_device / 197 TF/s (bf16)
+    memory term     = HLO_bytes_per_device / 819 GB/s
+    collective term = collective_bytes_per_device / 50 GB/s-link
+    bottleneck      = argmax of the three
+    MODEL_FLOPS     = 6*N*D (train) / 2*N*D (prefill/decode), N = active params
+    useful fraction = (MODEL_FLOPS/chips/peak) / max(term)
+
+The HLO numbers come from launch/hlo_analysis.py (dot FLOPs + post-fusion
+bytes + collective bytes, while-bodies multiplied by parsed trip counts).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def load_cells(mesh: str = "single") -> list[dict]:
+    cells = []
+    for f in sorted(glob.glob(os.path.join(RESULTS, f"*_{mesh}.json"))):
+        r = json.load(open(f))
+        if "error" in r or "skipped" in r:
+            cells.append(r)
+            continue
+        cells.append(compute_terms(r))
+    return cells
+
+
+def model_flops(rec: dict) -> float:
+    """Useful model FLOPs per device per step."""
+    n = rec["active_params"]
+    if rec["kind"] == "train":
+        tokens = rec["global_batch"] * rec["seq_len"]
+        total = 6.0 * n * tokens
+    elif rec["kind"] == "prefill":
+        tokens = rec["global_batch"] * rec["seq_len"]
+        total = 2.0 * n * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n * rec["global_batch"]
+    return total / rec["n_devices"]
+
+
+def compute_terms(rec: dict) -> dict:
+    coll = sum(rec["collective_bytes_per_device"].values())
+    t_c = rec["flops_per_device"] / PEAK_FLOPS
+    t_m = rec["hbm_bytes_per_device"] / HBM_BW
+    t_x = coll / ICI_BW
+    terms = {"compute_s": t_c, "memory_s": t_m, "collective_s": t_x}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(rec)
+    useful_s = mf / PEAK_FLOPS
+    bound = max(terms.values())
+    rec = dict(rec)
+    rec.update(terms)
+    rec["dominant"] = dom.replace("_s", "")
+    rec["model_flops_per_device"] = mf
+    rec["model_over_hlo_flops"] = (mf / rec["flops_per_device"]
+                                   if rec["flops_per_device"] else 0.0)
+    rec["roofline_fraction"] = useful_s / bound if bound else 0.0
+    rec["lever"] = _lever(rec)
+    return rec
+
+
+def _lever(r: dict) -> str:
+    if r["dominant"] == "collective":
+        return ("shrink/overlap collectives: reshard to cut all-reduce "
+                "volume, chunked AG-matmul overlap, int8 gradient compression")
+    if r["dominant"] == "memory":
+        if r["kind"] == "decode":
+            return ("KV-cache traffic bound: quantize cache, batch more "
+                    "sequences per step, fuse attention (flash-decode)")
+        return ("cut HBM traffic: fuse via Pallas kernels, reduce remat "
+                "recompute, bf16 intermediates")
+    return ("raise MXU utilization: remove redundant/replicated compute, "
+            "reduce remat recompute, fold fp32 upcasts")
+
+
+def report(emit) -> None:
+    rows = []
+    for mesh in ("single",):
+        for r in load_cells(mesh):
+            tag = f"{r['arch']}.{r['shape']}.{mesh}"
+            if "skipped" in r:
+                rows.append((f"roofline.{tag}.skipped", 0.0, 0))
+                continue
+            if "error" in r:
+                rows.append((f"roofline.{tag}.ERROR", 0.0, 0))
+                continue
+            rows.append((f"roofline.{tag}.compute_s", 0.0,
+                         round(r["compute_s"], 4)))
+            rows.append((f"roofline.{tag}.memory_s", 0.0,
+                         round(r["memory_s"], 4)))
+            rows.append((f"roofline.{tag}.collective_s", 0.0,
+                         round(r["collective_s"], 4)))
+            rows.append((f"roofline.{tag}.dominant", 0.0, r["dominant"]))
+            rows.append((f"roofline.{tag}.fraction", 0.0,
+                         round(r["roofline_fraction"], 4)))
+    emit(rows)
+
+
+def table(mesh: str = "single") -> str:
+    """Markdown table for EXPERIMENTS.md."""
+    out = ["| arch | shape | compute s | memory s | collective s | dominant "
+           "| MODEL/HLO flops | roofline frac |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in load_cells(mesh):
+        if "skipped" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | skipped | — | — |")
+            continue
+        if "error" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | ERROR | — | — |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"**{r['dominant']}** | {r['model_over_hlo_flops']:.2f} | "
+            f"{r['roofline_fraction']:.3f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print(table("single"))

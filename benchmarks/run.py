@@ -1,0 +1,64 @@
+"""Benchmark harness — one section per paper table/figure + the framework's
+own dry-run/roofline tables.  Prints ``name,us_per_call,derived`` CSV."""
+from __future__ import annotations
+
+import sys
+
+
+def _emit(rows):
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+def main() -> None:
+    from benchmarks import paper
+
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+
+    for storage in ("reg", "bram"):
+        if only and only not in ("paper", storage):
+            continue
+        res = paper.compute(storage=storage)
+        print(f"# === paper Fig.7 — multi-dim pipelining vs loop-only "
+              f"[{storage}] (paper band: 1.7-3.7x, avg 2.42x) ===")
+        rows = paper.fig7(res)
+        _emit([(f"fig7.{storage}.{n}", us, d) for n, us, d in rows])
+        avg = sum(d for _, _, d in rows) / len(rows)
+        print(f"fig7.{storage}.average,0.0,{avg:.3f}")
+
+        print(f"# === paper Fig.8 — vs Vitis-dataflow model on SPSC variants "
+              f"[{storage}] (paper: ours avg 1.30x over dataflow) ===")
+        _emit([(f"fig8.{storage}.{n}", us, d) for n, us, d in paper.fig8(res)])
+
+        print(f"# === paper Fig.9 — resource model relative to Vitis-seq "
+              f"[{storage}] ===")
+        _emit([(f"fig9.{storage}.{n}", us, d) for n, us, d in paper.fig9(res)])
+
+        print(f"# === paper Fig.10 — unmodified non-SPSC workloads "
+              f"[{storage}] (paper band: 2-2.9x) ===")
+        _emit([(f"fig10.{storage}.{n}", us, d) for n, us, d in paper.fig10(res)])
+
+    if only in (None, "pipeline"):
+        try:
+            from benchmarks import pipeline_ilp_bench
+            pipeline_ilp_bench.run(_emit)
+        except Exception as e:  # pragma: no cover
+            print(f"# pipeline_ilp bench unavailable: {e}")
+
+    if only in (None, "kernels"):
+        try:
+            from benchmarks import kernel_bench
+            kernel_bench.run(_emit)
+        except Exception as e:  # pragma: no cover
+            print(f"# kernel bench unavailable: {e}")
+
+    if only in (None, "roofline"):
+        try:
+            from benchmarks import roofline
+            roofline.report(_emit)
+        except Exception as e:  # pragma: no cover
+            print(f"# roofline report unavailable (run launch.dryrun first): {e}")
+
+
+if __name__ == "__main__":
+    main()

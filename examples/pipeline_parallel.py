@@ -1,0 +1,58 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=8").strip()
+"""Pipeline parallelism driven by the ILP schedule, executed with
+shard_map + lax.ppermute on an 8-device host-platform mesh.
+
+    python examples/pipeline_parallel.py        (sets its own XLA_FLAGS)
+"""
+import sys
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pipeline_ilp
+from repro.parallel.pipeline import (pipelined_forward, pipelined_loss,
+                                     reference_forward)
+
+
+def main():
+    S, M, D = 8, 16, 64
+    mesh = jax.make_mesh((S,), ("stage",))
+    print("ILP-synthesized schedule:")
+    ps = pipeline_ilp.synthesize(S, M, t_f=1, t_b=2)
+    print(f"  II={ps.ii} latency={ps.latency} "
+          f"peak_act={ps.peak_live_activations} "
+          f"(gpipe latency {pipeline_ilp.gpipe_latency(S, M)}, "
+          f"gpipe peak act {S * M})")
+
+    key = jax.random.key(0)
+    stage_params = {
+        "w": jax.random.normal(key, (S, D, D)) * (D ** -0.5),
+        "b": jnp.zeros((S, D)),
+    }
+
+    def stage_fn(p, x):
+        return jnp.tanh(x @ p["w"] + p["b"])
+
+    mbs = jax.random.normal(jax.random.key(1), (M, 4, D))
+    out = pipelined_forward(stage_fn, stage_params, mbs, mesh, "stage")
+    ref = reference_forward(stage_fn, stage_params, mbs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    print("pipelined forward == sequential reference ✓")
+
+    tgt = jnp.zeros_like(ref)
+    g = jax.grad(lambda p: pipelined_loss(stage_fn, p, mbs, tgt, mesh,
+                                          "stage"))(stage_params)
+    gref = jax.grad(lambda p: jnp.mean(
+        jnp.square(reference_forward(stage_fn, p, mbs) - tgt)))(stage_params)
+    np.testing.assert_allclose(np.asarray(g["w"]), np.asarray(gref["w"]),
+                               rtol=2e-4, atol=2e-5)
+    print("backward through the pipeline (AD transpose of the ILP schedule) ✓")
+
+
+if __name__ == "__main__":
+    main()

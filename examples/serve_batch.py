@@ -1,0 +1,20 @@
+"""Batched serving example: prefill + greedy decode with KV/state caches for
+an attention-free (RWKV-6) and an attention (llama) architecture.
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+import sys
+sys.path.insert(0, "src")
+
+from repro.launch import serve
+
+
+def main():
+    for arch in ("rwkv6_3b", "llama3_8b"):
+        print(f"=== serving {arch} (reduced) ===")
+        serve.main(["--arch", arch, "--reduced", "--batch", "4",
+                    "--prompt-len", "16", "--gen", "12"])
+
+
+if __name__ == "__main__":
+    main()

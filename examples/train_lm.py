@@ -1,0 +1,64 @@
+"""End-to-end training example.
+
+Default: a 2-minute CPU-sized run (reduced llama3-8b family).  The ~100M
+configuration from the assignment brief:
+
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+
+trains a 12L/768d/12H model (~134M params incl. embeddings) for a few
+hundred steps with checkpointing + the fault-tolerant loop.
+"""
+import argparse
+import sys
+sys.path.insert(0, "src")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=["tiny", "100m"], default="tiny")
+    ap.add_argument("--steps", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    from repro.launch import train
+
+    if args.preset == "tiny":
+        steps = args.steps or 30
+        argv = ["--arch", "llama3_8b", "--reduced", "--steps", str(steps),
+                "--batch", "4", "--seq", "128",
+                "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "10"]
+        losses = train.main(argv)
+    else:
+        # ~100M: build the config inline (configs define the assigned archs;
+        # this one is the example-scale model from the brief)
+        import dataclasses
+        from repro.config import get_config
+        import repro.configs.llama3_8b as base
+
+        cfg100 = dataclasses.replace(
+            base.config(), n_layers=12, d_model=768, n_heads=12,
+            n_kv_heads=4, head_dim=64, d_ff=3072, vocab=32000,
+            dtype="float32")
+        print(f"params ~= {cfg100.param_count()/1e6:.0f}M")
+        steps = args.steps or 300
+        # monkey-patch get_config path: drive the trainer with the custom cfg
+        from repro.launch import steps as steps_mod
+        import repro.launch.train as T
+        orig = T.get_config
+        T.get_config = lambda *a, **k: cfg100
+        try:
+            losses = T.main(["--arch", "llama3_8b", "--steps", str(steps),
+                             "--batch", "4", "--seq", "256",
+                             "--ckpt-dir", args.ckpt_dir,
+                             "--ckpt-every", "50"])
+        finally:
+            T.get_config = orig
+    if len(losses) >= 20:  # too noisy to assert on very short runs
+        assert losses[-1] < losses[0], "loss must decrease"
+        print("OK: loss decreased", losses[0], "->", losses[-1])
+    else:
+        print("short run:", losses[0], "->", losses[-1])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+# The paper's primary contribution: an ILP-based HLS scheduler performing
+# multi-dimensional (intra-loop + producer-consumer) pipelining, plus its
+# applications inside the JAX framework (pipeline-parallel schedule synthesis,
+# collective/compute overlap, Pallas line-buffer sizing).
+from .ir import (AffExpr, ArrayDecl, ArithOp, ConstOp, LoadOp, Loop, Program,
+                 ProgramBuilder, StoreOp, aff, iv, normalize)
+from .ilp import solve_ilp, solve_lp, brute_force_ilp
+from .deps import DepAnalysis, DepEdge
+from .scheduler import Schedule, schedule, feasible, emit_hir
+from .autotune import autotune, compile_program
+
+__all__ = [
+    "AffExpr", "ArrayDecl", "ArithOp", "ConstOp", "LoadOp", "Loop", "Program",
+    "ProgramBuilder", "StoreOp", "aff", "iv", "normalize",
+    "solve_ilp", "solve_lp", "brute_force_ilp",
+    "DepAnalysis", "DepEdge", "Schedule", "schedule", "feasible", "emit_hir",
+    "autotune", "compile_program",
+]

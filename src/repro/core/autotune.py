@@ -1,0 +1,91 @@
+"""The paper's auto-tuner (§3.1): binary search for the smallest feasible II
+of every loop that lacks a programmer-specified ``pipeline`` II.
+
+Feasibility of an II assignment = the scheduling system admits a solution
+(Bellman-Ford finds no positive cycle) and loop-counter occupancy holds.
+Loops are tuned innermost-first; memory-dependence-ILP results are cached
+across probes (DepAnalysis keys them on the relevant II values).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from .deps import DepAnalysis
+from .ir import Loop, Program
+from .scheduler import Schedule, check_loop_occupancy, feasible, schedule
+
+
+def _loops_with_depth(p: Program) -> list[tuple[Loop, int]]:
+    return [(n, len(anc)) for n, anc in p.walk() if isinstance(n, Loop)]
+
+
+def _seq_ii_bound(p: Program, loop: Loop) -> int:
+    """A conservative (sequential-execution) II upper bound, bottom-up."""
+    total = 1
+    for item in loop.body:
+        if isinstance(item, Loop):
+            total += item.trip * _seq_ii_bound(p, item)
+        else:
+            total += p.op_latency(item)
+    return total
+
+
+def _occupancy_floor(loop: Loop, iis: dict[int, int]) -> int:
+    lo = 1
+    for item in loop.body:
+        if isinstance(item, Loop):
+            lo = max(lo, item.trip * iis[item.uid])
+    return lo
+
+
+def autotune(p: Program, dep: Optional[DepAnalysis] = None,
+             verbose: bool = False) -> dict[int, int]:
+    """Return loop uid -> II (programmer-specified IIs respected)."""
+    dep = dep or DepAnalysis(p)
+    loops = _loops_with_depth(p)
+    iis: dict[int, int] = {}
+    tunable: list[Loop] = []
+    for loop, _ in loops:
+        if loop.ii is not None:
+            iis[loop.uid] = loop.ii
+        else:
+            iis[loop.uid] = _seq_ii_bound(p, loop)
+            tunable.append(loop)
+
+    # innermost-first (deepest), then program order
+    depth = {l.uid: d for l, d in loops}
+    tunable.sort(key=lambda l: -depth[l.uid])
+
+    for loop in tunable:
+        lo = _occupancy_floor(loop, iis)
+        hi = max(lo, iis[loop.uid])
+        # ensure hi feasible (double if the conservative bound still fails,
+        # e.g. due to cross-nest port serialization pressure)
+        guard = 0
+        while not feasible(p, {**iis, loop.uid: hi}, dep) and guard < 8:
+            hi *= 2
+            guard += 1
+        best = hi
+        while lo <= hi:
+            mid = (lo + hi) // 2
+            if feasible(p, {**iis, loop.uid: mid}, dep):
+                best = mid
+                hi = mid - 1
+            else:
+                lo = mid + 1
+        iis[loop.uid] = best
+        if verbose:
+            print(f"  autotune: loop {loop.ivname} II={best}")
+
+    assert check_loop_occupancy(p, iis)
+    assert feasible(p, iis, dep), "autotuned IIs must be feasible"
+    return iis
+
+
+def compile_program(p: Program, verbose: bool = False) -> Schedule:
+    """Full pipeline: dependence analysis -> II autotune -> scheduling ILP."""
+    dep = DepAnalysis(p)
+    iis = autotune(p, dep, verbose=verbose)
+    s = schedule(p, iis, dep)
+    assert s.feasible
+    return s

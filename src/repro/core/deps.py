@@ -1,0 +1,278 @@
+"""Dependence analysis: the paper's *memory-dependence ILPs* (§4.1–4.2).
+
+For every ordered pair of conflicting accesses (X source, Y sink) we minimize
+
+    slack = min  ivpart(Y) - ivpart(X)
+            s.t. loop bounds, address equality, happens-before
+
+where ``ivpart`` is the II-weighted iteration-vector component of the
+schedule time T(op, ivs) = theta_op + sum_l II_l * iv_l.  The scheduling
+system then enforces   theta_snk >= theta_src + delay - slack   which makes
+T_snk >= T_src + delay hold for *every* conflicting dynamic-instance pair.
+
+Happens-before is handled by lexicographic case-splitting per common-loop
+depth (exact, and keeps ILP coefficients small — the paper instead linearizes
+sequential time with large strides; both are equivalent for constant bounds).
+
+Port conflicts use the same machinery as pseudo-dependences with the address
+equality restricted to completely-partitioned dims (bank equality), exactly
+the paper's "assume all operations on the same port have a data dependence".
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from .ilp import solve_ilp
+from .ir import ArrayDecl, LoadOp, Loop, Program, StoreOp, position_keys
+
+
+@dataclass(frozen=True)
+class Access:
+    op: object  # LoadOp | StoreOp
+    ancestors: tuple[Loop, ...]
+    array: ArrayDecl
+    is_write: bool
+    port: int
+
+    @property
+    def uid(self):
+        return self.op.uid
+
+
+@dataclass(frozen=True)
+class DepEdge:
+    """Constraint theta_snk >= theta_src + lower  (lower = delay - slack)."""
+
+    src: int  # op uid
+    snk: int
+    lower: int
+    kind: str  # RAW | WAR | WAW | PORT | SSA | STRUCT
+    array: str = ""
+
+
+def collect_accesses(p: Program) -> list[Access]:
+    """Gather memory accesses and assign ports (simple policy: round-robin
+    over compatible ports per array, in program order — writes over write
+    ports, reads over read ports).  ``reg`` arrays are fully partitioned
+    registers and take no port."""
+    rr: dict[tuple[str, str], int] = {}
+    out = []
+    for op, anc in p.walk():
+        if not isinstance(op, (LoadOp, StoreOp)):
+            continue
+        arr = p.arrays[op.array]
+        is_write = isinstance(op, StoreOp)
+        if arr.kind == "reg":
+            port = 0
+        else:
+            ports = arr.write_ports() if is_write else arr.read_ports()
+            if not ports:
+                raise ValueError(
+                    f"array {arr.name} has no {'write' if is_write else 'read'} port")
+            key = (arr.name, "w" if is_write else "r")
+            k = rr.get(key, 0)
+            port = ports[k % len(ports)]
+            rr[key] = k + 1
+        op.port = port
+        out.append(Access(op=op, ancestors=tuple(anc), array=arr,
+                          is_write=is_write, port=port))
+    return out
+
+
+def _common_prefix_len(a: tuple[Loop, ...], b: tuple[Loop, ...]) -> int:
+    n = 0
+    for x, y in zip(a, b):
+        if x is y:
+            n += 1
+        else:
+            break
+    return n
+
+
+class DepAnalysis:
+    """Caches memory-dependence-ILP results across autotuner II probes."""
+
+    def __init__(self, p: Program):
+        self.p = p
+        self.accesses = collect_accesses(p)
+        self.pos = position_keys(p)
+        self._cache: dict = {}
+
+    # ------------------------------------------------------------------
+    def _slack_case(self, X: Access, Y: Access, carry_level: Optional[int],
+                    eq_dims: Optional[list[int]], iis: dict[int, int]) -> Optional[int]:
+        """Solve one memory-dependence ILP case; None if infeasible (no dep)."""
+        la, lb = X.ancestors, Y.ancestors
+        key = (X.uid, Y.uid, carry_level, tuple(eq_dims) if eq_dims is not None else None,
+               tuple(iis[l.uid] for l in la), tuple(iis[l.uid] for l in lb))
+        if key in self._cache:
+            return self._cache[key]
+
+        nx, ny = len(la), len(lb)
+        n = nx + ny
+
+        def xcol(i):  # source iv columns
+            return i
+
+        def ycol(i):
+            return nx + i
+
+        bounds = [(l.lb, l.ub - 1) for l in la] + [(l.lb, l.ub - 1) for l in lb]
+        A_eq, b_eq, A_ub, b_ub = [], [], [], []
+
+        def name_to_col_src(nm):
+            for i, l in enumerate(la):
+                if l.ivname == nm:
+                    return xcol(i)
+            raise KeyError(nm)
+
+        def name_to_col_snk(nm):
+            for i, l in enumerate(lb):
+                if l.ivname == nm:
+                    return ycol(i)
+            raise KeyError(nm)
+
+        # address equality on the requested dims
+        dims = range(len(X.array.shape)) if eq_dims is None else eq_dims
+        if X.op.array == Y.op.array:
+            for d in dims:
+                ex, ey = X.op.index[d], Y.op.index[d]
+                row = np.zeros(n)
+                for nm, c in ex.coeffs.items():
+                    row[name_to_col_src(nm)] += c
+                for nm, c in ey.coeffs.items():
+                    row[name_to_col_snk(nm)] -= c
+                A_eq.append(row)
+                b_eq.append(ey.const - ex.const)
+
+        # happens-before
+        pfx = _common_prefix_len(la, lb)
+        if carry_level is not None:
+            assert carry_level < pfx
+            for k in range(carry_level):
+                row = np.zeros(n)
+                row[xcol(k)] = 1.0
+                row[ycol(k)] = -1.0
+                A_eq.append(row)
+                b_eq.append(0.0)
+            row = np.zeros(n)
+            row[xcol(carry_level)] = 1.0
+            row[ycol(carry_level)] = -1.0
+            A_ub.append(row)
+            b_ub.append(-1.0)  # iv_src <= iv_snk - 1
+        else:
+            # loop-independent: all common ivs equal (caller checked program order)
+            for k in range(pfx):
+                row = np.zeros(n)
+                row[xcol(k)] = 1.0
+                row[ycol(k)] = -1.0
+                A_eq.append(row)
+                b_eq.append(0.0)
+
+        # objective: min ivpart(Y) - ivpart(X)
+        c = np.zeros(n)
+        for i, l in enumerate(la):
+            c[xcol(i)] -= iis[l.uid]
+        for i, l in enumerate(lb):
+            c[ycol(i)] += iis[l.uid]
+
+        res = solve_ilp(c, np.asarray(A_ub) if A_ub else None,
+                        np.asarray(b_ub) if b_ub else None,
+                        np.asarray(A_eq) if A_eq else None,
+                        np.asarray(b_eq) if b_eq else None,
+                        bounds=bounds)
+        val = int(round(res.fun)) if res.ok else None
+        self._cache[key] = val
+        return val
+
+    # ------------------------------------------------------------------
+    def _slack(self, X: Access, Y: Access, eq_dims: Optional[list[int]],
+               iis: dict[int, int]) -> Optional[int]:
+        """min slack over all happens-before cases (None = no dependence)."""
+        pfx = _common_prefix_len(X.ancestors, Y.ancestors)
+        slacks = []
+        for lvl in range(pfx):
+            s = self._slack_case(X, Y, lvl, eq_dims, iis)
+            if s is not None:
+                slacks.append(s)
+        # loop-independent case only when X syntactically precedes Y
+        px, py = self.pos[X.uid], self.pos[Y.uid]
+        if X.uid != Y.uid and px < py:
+            s = self._slack_case(X, Y, None, eq_dims, iis)
+            if s is not None:
+                slacks.append(s)
+        if not slacks:
+            return None
+        return min(slacks)
+
+    # ------------------------------------------------------------------
+    def memory_edges(self, iis: dict[int, int]) -> list[DepEdge]:
+        edges = []
+        by_array: dict[str, list[Access]] = {}
+        for a in self.accesses:
+            by_array.setdefault(a.op.array, []).append(a)
+        for name, accs in by_array.items():
+            arr = self.p.arrays[name]
+            # ---- real data dependences -------------------------------
+            for X in accs:
+                for Y in accs:
+                    if not (X.is_write or Y.is_write):
+                        continue
+                    if X.is_write and not Y.is_write:
+                        kind, delay = "RAW", arr.wr_latency
+                    elif not X.is_write and Y.is_write:
+                        kind, delay = "WAR", 1
+                    else:
+                        kind, delay = "WAW", 1
+                    s = self._slack(X, Y, None, iis)
+                    if s is None:
+                        continue
+                    edges.append(DepEdge(src=X.uid, snk=Y.uid,
+                                         lower=delay - s, kind=kind, array=name))
+            # ---- port pseudo-dependences ------------------------------
+            if arr.kind == "reg":
+                continue
+            by_port: dict[int, list[Access]] = {}
+            for a in accs:
+                by_port.setdefault(a.port, []).append(a)
+            part = list(arr.partition)
+            for port, paccs in by_port.items():
+                for X in paccs:
+                    for Y in paccs:
+                        s = self._slack(X, Y, part, iis)
+                        if s is None:
+                            continue
+                        edges.append(DepEdge(src=X.uid, snk=Y.uid,
+                                             lower=1 - s, kind="PORT", array=name))
+        return edges
+
+    # ------------------------------------------------------------------
+    def ssa_edges(self) -> list[DepEdge]:
+        defs: dict[str, object] = {}
+        edges = []
+        for op, _ in self.p.walk():
+            if isinstance(op, Loop):
+                continue
+            for a in getattr(op, "args", ()) or ():
+                if a in defs:
+                    d = defs[a]
+                    edges.append(DepEdge(src=d.uid, snk=op.uid,
+                                         lower=self.p.op_latency(d), kind="SSA"))
+            if isinstance(op, StoreOp) and op.value in defs:
+                d = defs[op.value]
+                edges.append(DepEdge(src=d.uid, snk=op.uid,
+                                     lower=self.p.op_latency(d), kind="SSA"))
+            if op.result is not None:
+                defs[op.result] = op
+        return edges
+
+    def struct_edges(self) -> list[DepEdge]:
+        edges = []
+        for node, anc in self.p.walk():
+            if anc:
+                edges.append(DepEdge(src=anc[-1].uid, snk=node.uid, lower=0,
+                                     kind="STRUCT"))
+        return edges

@@ -1,0 +1,316 @@
+"""Self-contained LP / ILP solvers used by the HLS scheduler.
+
+This container ships no scipy/pulp/ortools, so the paper's two ILP classes
+(memory-dependence ILPs and the scheduling ILP) are solved with our own
+numpy dense-tableau two-phase simplex (Bland's rule, cycle-safe) wrapped in
+a depth-first branch-and-bound for integrality.  Problems are small (tens of
+variables); the scheduling system itself is solved as a difference-constraint
+graph (see scheduler.py) and only falls back to this LP for the
+delay-register-minimization objective.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import numpy as np
+
+TOL = 1e-7
+
+
+@dataclass
+class LPResult:
+    status: str  # "optimal" | "infeasible" | "unbounded" | "iteration_limit"
+    x: Optional[np.ndarray]
+    fun: Optional[float]
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "optimal"
+
+
+def _pivot(T: np.ndarray, basis: list[int], row: int, col: int) -> None:
+    T[row] = T[row] / T[row, col]
+    factor = T[:, col].copy()
+    factor[row] = 0.0
+    T -= np.outer(factor, T[row])
+    # outer-product update can leave tiny residue in the pivot column
+    T[:, col] = 0.0
+    T[row, col] = 1.0
+    basis[row] = col
+
+
+def _simplex_core(T: np.ndarray, basis: list[int], c_full: np.ndarray,
+                  maxiter: int) -> str:
+    """Primal simplex on tableau T (m x (n+1), RHS in last column).
+
+    ``basis`` holds the basic column of each row and is updated in place.
+    Bland's rule (lowest-index entering / leaving) guarantees termination.
+    """
+    m, ncols = T.shape
+    n = ncols - 1
+    for _ in range(maxiter):
+        cB = c_full[basis]
+        reduced = c_full[:n] - cB @ T[:, :n]
+        candidates = np.where(reduced < -TOL)[0]
+        if candidates.size == 0:
+            return "optimal"
+        enter = int(candidates[0])  # Bland: lowest index
+        col = T[:, enter]
+        pos = np.where(col > TOL)[0]
+        if pos.size == 0:
+            return "unbounded"
+        ratios = T[pos, n] / col[pos]
+        best = ratios.min()
+        ties = pos[np.where(ratios <= best + 1e-12)[0]]
+        # Bland: leave the basic variable with the lowest index
+        leave_row = int(ties[np.argmin(np.asarray(basis)[ties])])
+        _pivot(T, basis, leave_row, enter)
+    return "iteration_limit"
+
+
+def solve_lp(c: Sequence[float],
+             A_ub: Optional[np.ndarray] = None,
+             b_ub: Optional[np.ndarray] = None,
+             A_eq: Optional[np.ndarray] = None,
+             b_eq: Optional[np.ndarray] = None,
+             maxiter: int = 50000) -> LPResult:
+    """minimize c@x  s.t.  A_ub@x <= b_ub,  A_eq@x == b_eq,  x >= 0."""
+    c = np.asarray(c, dtype=np.float64)
+    n = c.shape[0]
+    rows = []
+    rhs = []
+    kinds = []  # "ub" | "eq"
+    if A_ub is not None and len(A_ub):
+        A_ub = np.asarray(A_ub, dtype=np.float64).reshape(-1, n)
+        b_ub = np.asarray(b_ub, dtype=np.float64).ravel()
+        for i in range(A_ub.shape[0]):
+            rows.append(A_ub[i])
+            rhs.append(b_ub[i])
+            kinds.append("ub")
+    if A_eq is not None and len(A_eq):
+        A_eq = np.asarray(A_eq, dtype=np.float64).reshape(-1, n)
+        b_eq = np.asarray(b_eq, dtype=np.float64).ravel()
+        for i in range(A_eq.shape[0]):
+            rows.append(A_eq[i])
+            rhs.append(b_eq[i])
+            kinds.append("eq")
+    m = len(rows)
+    if m == 0:
+        # unconstrained besides x >= 0
+        if np.any(c < -TOL):
+            return LPResult("unbounded", None, None)
+        return LPResult("optimal", np.zeros(n), 0.0)
+
+    A = np.asarray(rows, dtype=np.float64)
+    b = np.asarray(rhs, dtype=np.float64)
+
+    # normalize to b >= 0
+    n_slack = sum(1 for k in kinds if k == "ub")
+    # columns: x (n) | slacks (n_slack) | artificials (<= m) | rhs
+    slack_cols = {}
+    j = n
+    for i, k in enumerate(kinds):
+        if k == "ub":
+            slack_cols[i] = j
+            j += 1
+    flipped = b < -TOL
+    total_pre_art = n + n_slack
+    T = np.zeros((m, total_pre_art + m + 1), dtype=np.float64)
+    basis: list[int] = [-1] * m
+    art_cols: list[int] = []
+    next_art = total_pre_art
+    for i in range(m):
+        row = A[i].copy()
+        bi = b[i]
+        sgn = 1.0
+        if flipped[i]:
+            row = -row
+            bi = -bi
+            sgn = -1.0
+        T[i, :n] = row
+        T[i, -1] = bi
+        if kinds[i] == "ub":
+            T[i, slack_cols[i]] = sgn  # flipped <= becomes >=, slack sign flips
+        # does this row have a usable identity column (its slack with +1)?
+        if kinds[i] == "ub" and sgn > 0:
+            basis[i] = slack_cols[i]
+        else:
+            T[i, next_art] = 1.0
+            basis[i] = next_art
+            art_cols.append(next_art)
+            next_art += 1
+    used_cols = next_art
+    T = T[:, list(range(used_cols)) + [T.shape[1] - 1]]
+    ncols = T.shape[1] - 1
+
+    if art_cols:
+        c1 = np.zeros(ncols)
+        for ac in art_cols:
+            c1[ac] = 1.0
+        status = _simplex_core(T, basis, c1, maxiter)
+        if status != "optimal":
+            return LPResult(status, None, None)
+        obj1 = float(c1[basis] @ T[:, -1])
+        if obj1 > 1e-6:
+            return LPResult("infeasible", None, None)
+        # drive remaining artificials out of the basis
+        for i in range(m):
+            if basis[i] in art_cols:
+                # pivot on any non-artificial column with nonzero entry
+                done = False
+                for jcol in range(ncols):
+                    if jcol in art_cols:
+                        continue
+                    if abs(T[i, jcol]) > 1e-9:
+                        _pivot(T, basis, i, jcol)
+                        done = True
+                        break
+                if not done:
+                    # redundant row; harmless — leave artificial at zero
+                    pass
+        # forbid artificials from re-entering by giving them +inf-ish cost 0 and
+        # zeroing their columns
+        for ac in art_cols:
+            T[:, ac] = 0.0
+
+    c2 = np.zeros(ncols)
+    c2[:n] = c
+    status = _simplex_core(T, basis, c2, maxiter)
+    if status != "optimal":
+        return LPResult(status, None, None)
+    x = np.zeros(ncols)
+    for i in range(m):
+        x[basis[i]] = T[i, -1]
+    xs = x[:n]
+    return LPResult("optimal", xs, float(c @ xs))
+
+
+@dataclass
+class ILPResult:
+    status: str
+    x: Optional[np.ndarray]
+    fun: Optional[float]
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "optimal"
+
+
+def solve_ilp(c: Sequence[float],
+              A_ub: Optional[np.ndarray] = None,
+              b_ub: Optional[np.ndarray] = None,
+              A_eq: Optional[np.ndarray] = None,
+              b_eq: Optional[np.ndarray] = None,
+              bounds: Optional[Sequence[tuple[int, int]]] = None,
+              max_nodes: int = 4000) -> ILPResult:
+    """Minimize c@x over integer x with optional per-variable (lo, hi) bounds.
+
+    Branch-and-bound over the LP relaxation.  Variables default to x >= 0; pass
+    ``bounds`` to shift/cap them (bounds may be negative; we shift internally).
+    """
+    c = np.asarray(c, dtype=np.float64)
+    n = c.shape[0]
+    if bounds is None:
+        bounds = [(0, None)] * n
+    los = np.array([b[0] for b in bounds], dtype=np.float64)
+    # shift x = y + lo  =>  y >= 0
+    A_ub_l = [] if A_ub is None else [np.asarray(A_ub, np.float64).reshape(-1, n)]
+    b_ub_l = [] if b_ub is None else [np.asarray(b_ub, np.float64).ravel()]
+    if A_ub_l:
+        b_ub_l = [b_ub_l[0] - A_ub_l[0] @ los]
+    A_eq_s = None
+    b_eq_s = None
+    if A_eq is not None and len(A_eq):
+        A_eq_s = np.asarray(A_eq, np.float64).reshape(-1, n)
+        b_eq_s = np.asarray(b_eq, np.float64).ravel() - A_eq_s @ los
+    # upper bounds become rows
+    ub_rows = []
+    ub_rhs = []
+    for i, (lo, hi) in enumerate(bounds):
+        if hi is not None:
+            r = np.zeros(n)
+            r[i] = 1.0
+            ub_rows.append(r)
+            ub_rhs.append(hi - lo)
+    if ub_rows:
+        A_ub_l.append(np.asarray(ub_rows))
+        b_ub_l.append(np.asarray(ub_rhs, np.float64))
+    A0 = np.vstack(A_ub_l) if A_ub_l else None
+    b0 = np.concatenate(b_ub_l) if b_ub_l else None
+
+    best_val = math.inf
+    best_x: Optional[np.ndarray] = None
+    const_shift = float(c @ los)
+
+    stack = [(A0, b0)]
+    nodes = 0
+    status_seen_feasible = False
+    while stack and nodes < max_nodes:
+        nodes += 1
+        A_cur, b_cur = stack.pop()
+        res = solve_lp(c, A_cur, b_cur, A_eq_s, b_eq_s)
+        if res.status == "unbounded":
+            return ILPResult("unbounded", None, None)
+        if not res.ok:
+            continue
+        if res.fun is not None and res.fun >= best_val - 1e-9:
+            continue  # bound
+        x = res.x
+        frac_idx = -1
+        worst = 0.0
+        for i in range(n):
+            f = abs(x[i] - round(x[i]))
+            if f > 1e-6 and f > worst:
+                worst = f
+                frac_idx = i
+        if frac_idx < 0:
+            xi = np.round(x).astype(np.int64)
+            val = float(c @ xi)
+            status_seen_feasible = True
+            if val < best_val:
+                best_val = val
+                best_x = xi
+            continue
+        lo_branch = math.floor(x[frac_idx])
+        # x[frac] <= floor
+        r = np.zeros(n)
+        r[frac_idx] = 1.0
+        A1 = r[None, :] if A_cur is None else np.vstack([A_cur, r])
+        b1 = np.array([lo_branch]) if b_cur is None else np.concatenate([b_cur, [lo_branch]])
+        # x[frac] >= ceil  ->  -x <= -(ceil)
+        A2 = (-r)[None, :] if A_cur is None else np.vstack([A_cur, -r])
+        b2 = np.array([-(lo_branch + 1)]) if b_cur is None else np.concatenate(
+            [b_cur, [-(lo_branch + 1)]])
+        stack.append((A1, b1))
+        stack.append((A2, b2))
+
+    if best_x is None:
+        return ILPResult("infeasible" if not status_seen_feasible else "iteration_limit",
+                         None, None)
+    return ILPResult("optimal", best_x + los.astype(np.int64), best_val + const_shift)
+
+
+def brute_force_ilp(c, A_ub=None, b_ub=None, A_eq=None, b_eq=None, bounds=None):
+    """Exhaustive reference for tests (tiny bounded problems only)."""
+    import itertools
+
+    c = np.asarray(c, dtype=np.float64)
+    n = len(c)
+    assert bounds is not None and all(b[1] is not None for b in bounds)
+    best = None
+    bx = None
+    for pt in itertools.product(*[range(lo, hi + 1) for lo, hi in bounds]):
+        x = np.asarray(pt, dtype=np.float64)
+        if A_ub is not None and len(A_ub) and np.any(np.asarray(A_ub) @ x > np.asarray(b_ub) + 1e-9):
+            continue
+        if A_eq is not None and len(A_eq) and np.any(np.abs(np.asarray(A_eq) @ x - np.asarray(b_eq)) > 1e-9):
+            continue
+        v = float(c @ x)
+        if best is None or v < best:
+            best = v
+            bx = np.asarray(pt, dtype=np.int64)
+    if best is None:
+        return ILPResult("infeasible", None, None)
+    return ILPResult("optimal", bx, best)

@@ -1,0 +1,67 @@
+"""jit'd public wrappers for the Pallas kernels + the ILP/kernel bridge.
+
+``interpret`` defaults to True on CPU (this container) and False on TPU, so
+the same call sites work in both environments.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention as _fa
+from repro.kernels.stencil_pipeline import stencil_pipeline as _sp
+from repro.kernels.wkv6 import wkv6 as _wkv
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, block_q=128, block_k=128,
+                    interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _fa(q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+               interpret=interpret)
+
+
+def stencil_pipeline(img, wx, wy, *, block_rows=8, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _sp(img, wx, wy, block_rows=block_rows, interpret=interpret)
+
+
+def wkv6(r, k, v, w, u, *, chunk=64, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _wkv(r, k, v, w, u, chunk=chunk, interpret=interpret)
+
+
+@functools.lru_cache()
+def ilp_halo_rows(taps: int = 3) -> int:
+    """Derive the stencil_pipeline line-buffer halo from the paper's
+    memory-dependence ILP: schedule a two-nest conv chain and convert the
+    producer->consumer slack into rows (slack = -(halo rows) * II_row)."""
+    from repro.core import compile_program
+    from repro.core.ir import ProgramBuilder
+
+    n = 8
+    b = ProgramBuilder("halo_probe")
+    b.array("img", (n + 2 * (taps - 1), n), partition=(0, 1), ports=("w", "r"))
+    b.array("mid", (n + taps - 1, n), partition=(0, 1), ports=("w", "r"))
+    b.array("out", (n, n), partition=(0, 1), ports=("w", "r"))
+    for src, dst, tag, extent in (("img", "mid", "p", n + taps - 1),
+                                  ("mid", "out", "c", n)):
+        with b.loop(f"{tag}i", 0, extent) as i:
+            with b.loop(f"{tag}j", 0, n) as j:
+                acc = [b.mul(b.load(src, i + t, j), b.const(1.0 / taps))
+                       for t in range(taps)]
+                b.store(dst, b.sum_tree(acc), i, j)
+    p = b.build()
+    s = compile_program(p)
+    prod, _ = p.body
+    ii_row = s.iis[prod.uid]
+    # the RAW dependence edges on `mid` carry the slack: lower = delay - slack
+    # = wr_latency + halo_rows * II_row; the worst edge is the deepest tap.
+    worst = max(e.lower for e in s.edges
+                if e.kind == "RAW" and e.array == "mid")
+    return max(1, -(-(worst - 1) // ii_row))  # ceil

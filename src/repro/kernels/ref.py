@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, causal=True):
+    """q,k,v: (B, H, S, hd) -> (B, H, S, hd), fp32 softmax."""
+    hd = q.shape[-1]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * hd ** -0.5
+    if causal:
+        S = q.shape[2]
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask, s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w.astype(q.dtype), v)
+
+
+def stencil_pipeline_ref(img, wx, wy):
+    """Fused producer-consumer separable stencil chain (the paper's Fig. 1
+    pattern): bx = conv_x(img, wx); out = conv_y(bx, wy).
+    img: (H, W); wx, wy: (3,).  'valid' padding: out is (H-2, W-2)."""
+    bx = sum(img[:, i:img.shape[1] - 2 + i] * wx[i] for i in range(3))
+    out = sum(bx[i:img.shape[0] - 2 + i, :] * wy[i] for i in range(3))
+    return out
+
+
+def wkv6_ref(r, k, v, w, u):
+    """RWKV-6 data-dependent-decay recurrence, sequential reference.
+    r,k,v,w: (B, H, S, hd); u: (H, hd).  Returns (out, final_state).
+
+       S_t = diag(w_t) S_{t-1} + k_t^T v_t
+       o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+    """
+    B, H, S, hd = r.shape
+
+    def step(s, args):
+        rt, kt, vt, wt = args  # (B,H,hd)
+        kv = kt[..., :, None] * vt[..., None, :]          # (B,H,hd,hd)
+        out = jnp.einsum("bhd,bhde->bhe", rt, s + u[..., :, None] * kv)
+        s1 = s * wt[..., :, None] + kv
+        return s1, out
+
+    s0 = jnp.zeros((B, H, hd, hd), r.dtype)
+    args = tuple(t.transpose(2, 0, 1, 3) for t in (r, k, v, w))
+    s_fin, outs = jax.lax.scan(step, s0, args)
+    return outs.transpose(1, 2, 0, 3), s_fin

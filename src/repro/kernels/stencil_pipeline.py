@@ -1,0 +1,59 @@
+"""Fused producer-consumer stencil chain as a Pallas TPU kernel — the
+paper's Fig. 1 pattern (two chained convolutions) adapted to the TPU memory
+hierarchy.
+
+The FPGA version overlaps the two loop nests with an ILP-derived slack: the
+consumer may start once the producer has written ``halo`` rows.  On TPU the
+same slack *sizes the VMEM line buffer*: each grid step loads a row tile plus
+``halo`` extra rows, computes the producer stage (conv-x) for the whole tile
+in VMEM, and immediately consumes it (conv-y) — the intermediate array never
+touches HBM.  ``ops.ilp_halo_rows()`` derives the halo by running the
+paper's memory-dependence ILP on the two-nest affine program.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(img_ref, wx_ref, wy_ref, o_ref, *, block_rows, halo):
+    i = pl.program_id(0)
+    BR = block_rows
+    Wout = o_ref.shape[1]
+    # line buffer: BR + halo input rows (the ILP slack), full width
+    rows = pl.load(img_ref, (pl.dslice(i * BR, BR + halo), slice(None)))
+    rows = rows.astype(jnp.float32)
+    # producer stage: conv-x (3 taps along width)
+    wx = wx_ref[...].astype(jnp.float32)
+    bx = (rows[:, 0:Wout] * wx[0] + rows[:, 1:Wout + 1] * wx[1]
+          + rows[:, 2:Wout + 2] * wx[2])                 # (BR+halo, Wout)
+    # consumer stage: conv-y (3 taps along rows) — starts "halo" rows behind
+    wy = wy_ref[...].astype(jnp.float32)
+    out = bx[0:BR] * wy[0] + bx[1:BR + 1] * wy[1] + bx[2:BR + 2] * wy[2]
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def stencil_pipeline(img, wx, wy, *, block_rows=8, interpret=False):
+    """img: (H, W); wx, wy: (3,).  Returns conv_y(conv_x(img)) of shape
+    (H-2, W-2), computed in one fused pass."""
+    H, W = img.shape
+    Hout, Wout = H - 2, W - 2
+    halo = 2  # == ops.ilp_halo_rows(): ceil(-slack / II_row) for 3-tap chains
+    block_rows = min(block_rows, Hout)
+    assert Hout % block_rows == 0, (Hout, block_rows)
+    return pl.pallas_call(
+        functools.partial(_kernel, block_rows=block_rows, halo=halo),
+        grid=(Hout // block_rows,),
+        in_specs=[
+            pl.BlockSpec((H, W), lambda i: (0, 0)),   # streamed line window
+            pl.BlockSpec((3,), lambda i: (0,)),
+            pl.BlockSpec((3,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, Wout), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Hout, Wout), img.dtype),
+        interpret=interpret,
+    )(img, wx, wy)

@@ -1,0 +1,195 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) on
+the production meshes with 512 placeholder host devices, then extract the
+roofline terms (FLOPs / bytes from cost_analysis, collective bytes parsed
+from the optimized HLO) and the per-device memory analysis.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3_8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh single|multi|both]
+
+Results are cached as JSON under benchmarks/results/dryrun/.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from repro.config import SHAPES, all_cells, get_config
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_production_mesh
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "benchmarks", "results", "dryrun")
+
+_COLL_RE = re.compile(
+    r"^\s*(?:\S+\s*=\s*)?"
+    r"\(?((?:[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?(?:,\s*)?)+)\)?\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(", re.M)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum result-shape bytes of every collective op in the (per-device)
+    optimized HLO.  ``-done`` ops are skipped; ``-start`` counted once."""
+    out: dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shapes_str, kind, _ = m.groups()
+        nbytes = 0
+        for dm in _SHAPE_RE.finditer(shapes_str):
+            dt, dims = dm.groups()
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        out[kind] = out.get(kind, 0) + nbytes
+    return out
+
+
+def _compile_cell(cfg, shape, mesh):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.parallel.sharding import ctx_mesh
+
+    fn, in_sh, out_sh, abstract = steps_mod.build(cfg, shape, mesh)
+
+    def to_named(tree):
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
+            tree, is_leaf=lambda x: isinstance(x, P) or x is None)
+
+    with ctx_mesh(mesh, style=cfg.parallel_style):
+        jfn = jax.jit(fn, in_shardings=to_named(in_sh),
+                      out_shardings=to_named(out_sh))
+        lowered = jfn.lower(*abstract)
+        return lowered.compile()
+
+
+def dryrun_cell(arch_id: str, shape_name: str, multi_pod: bool,
+                cfg_override=None) -> dict:
+    """Lower+compile one cell and extract roofline inputs.
+
+    The CPU backend's ``cost_analysis()`` excludes while (lax.scan)
+    subcomputations entirely, so FLOPs and collective bytes are re-derived
+    from the optimized HLO text by hlo_analysis.analyze(), which multiplies
+    loop bodies by their parsed trip counts.  (Elementwise flops are not
+    counted — dots dominate all 10 architectures; noted in EXPERIMENTS.md.)"""
+    from repro.launch import hlo_analysis
+
+    cfg = cfg_override or get_config(arch_id)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+
+    t0 = time.time()
+    compiled = _compile_cell(cfg, shape, mesh)
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    ana = hlo_analysis.analyze(compiled.as_text())
+
+    rec = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "n_devices": int(mesh.size),
+        "flops_per_device": ana["flops"],
+        "hbm_bytes_per_device": ana["bytes"],
+        "collective_bytes_per_device": ana["collective_bytes"],
+        "while_trips": ana["trips"],
+        "entry_cost_analysis": {"flops": float(cost.get("flops", 0.0))},
+        "memory": {
+            "argument_size": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_size": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_size": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "generated_code_size": int(getattr(mem, "generated_code_size_in_bytes", 0)),
+        },
+        "compile_seconds": round(t_compile, 1),
+        "model_params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "seq_len": shape.seq_len,
+        "global_batch": shape.global_batch,
+        "kind": shape.kind,
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tuned", action="store_true",
+                    help="apply the §Perf-confirmed levers (config.tune)")
+    args = ap.parse_args()
+
+    os.makedirs(RESULTS, exist_ok=True)
+    cells = []
+    if args.all:
+        for aid, sname, ok, why in all_cells():
+            if args.arch and aid != args.arch:
+                continue
+            cells.append((aid, sname, ok, why))
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape, True, "")]
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    n_ok = n_skip = n_fail = 0
+    for aid, sname, ok, why in cells:
+        for mp in meshes:
+            tag = f"{aid}_{sname}_{'multi' if mp else 'single'}" + \
+                ("_tuned" if args.tuned else "")
+            path = os.path.join(RESULTS, tag + ".json")
+            if os.path.exists(path) and not args.force:
+                print(f"[cached] {tag}")
+                n_ok += 1
+                continue
+            if not ok:
+                json.dump({"arch": aid, "shape": sname,
+                           "mesh": "multi" if mp else "single",
+                           "skipped": why}, open(path, "w"), indent=1)
+                print(f"[skip]   {tag}: {why}")
+                n_skip += 1
+                continue
+            try:
+                t0 = time.time()
+                from repro.config import tune
+                ovr = tune(get_config(aid), SHAPES[sname],
+                           n_chips=512 if mp else 256) if args.tuned else None
+                rec = dryrun_cell(aid, sname, mp, cfg_override=ovr)
+                json.dump(rec, open(path, "w"), indent=1)
+                print(f"[ok]     {tag}: flops/dev={rec['flops_per_device']:.3e} "
+                      f"coll={sum(rec['collective_bytes_per_device'].values()):.3e}B "
+                      f"({time.time()-t0:.0f}s)")
+                n_ok += 1
+            except Exception as e:
+                n_fail += 1
+                err = f"{type(e).__name__}: {e}"
+                json.dump({"arch": aid, "shape": sname,
+                           "mesh": "multi" if mp else "single",
+                           "error": err[:2000]}, open(path + ".err", "w"))
+                print(f"[FAIL]   {tag}: {err[:300]}")
+                traceback.print_exc(limit=3)
+    print(f"dryrun: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,296 @@
+"""HLO-text cost analyzer.
+
+The CPU backend's ``compiled.cost_analysis()`` only covers the entry
+computation — ``while`` (lax.scan) bodies are invisible, which undercounts a
+scanned transformer by ~the layer count.  This module re-derives the roofline
+inputs directly from ``compiled.as_text()``:
+
+  * builds the computation call graph (while body/condition, fusion calls,
+    to_apply),
+  * recovers each while loop's trip count from the ``compare(..., constant)``
+    in its condition computation,
+  * multiplies per-computation costs by their execution multiplicity,
+  * counts dot FLOPs (2 * result_elems * contraction_elems), elementwise-ish
+    FLOPs are approximated by fused-output elements, and collective bytes by
+    kind (all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute), skipping the ``-done`` halves of async pairs.
+
+Validated against jax's own cost analysis on unrolled (while-free) modules in
+tests/test_hlo_analysis.py.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-_]+)\s*\(.*\)\s*->", re.M)
+_SHAPE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_CALL_ATTR = re.compile(r"(?:body|calls|to_apply|condition)=\%?([\w\.\-_]+)")
+_CALLS_LIST = re.compile(r"calls=\{([^}]*)\}")
+_WHILE = re.compile(r"=\s*[a-z0-9]+\[.*?\]?[^=]*while\(")
+
+
+def _shape_elems(dt: str, dims: str) -> tuple[int, int]:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n, n * _DTYPE_BYTES.get(dt, 0)
+
+
+@dataclass
+class Computation:
+    name: str
+    lines: list[str] = field(default_factory=list)
+    flops: float = 0.0
+    bytes: float = 0.0  # operand+result bytes of top-level (post-fusion) ops
+    # (bytes, leading_dim) records so loop bodies can discount scan-stacked
+    # buffers that are sliced per iteration (leading dim == trip count)
+    byte_records: list = field(default_factory=list)
+    coll: dict[str, int] = field(default_factory=dict)
+    # (callee, kind) pairs; kind "while_body" gets the trip multiplier
+    calls: list[tuple[str, str]] = field(default_factory=list)
+    trip_for: dict[str, int] = field(default_factory=dict)
+
+
+def _split_computations(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    entry = None
+    for line in text.splitlines():
+        if (line.startswith("ENTRY") or
+                (line.startswith("%") and "->" in line and line.rstrip().endswith("{"))):
+            m = _COMP_HDR.match(line)
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                if line.startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        if cur is not None:
+            if line.startswith("}"):
+                cur = None
+            else:
+                cur.lines.append(line)
+    comps["__entry__"] = comps[entry] if entry else next(iter(comps.values()))
+    return comps
+
+
+def _result_shape(line: str):
+    """Shape on the lhs of '=' (the op result)."""
+    eq = line.find("=")
+    m = _SHAPE.search(line, eq + 1)
+    return m
+
+
+_DOT = re.compile(r"\bdot\(")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_COLL_OP = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+_TRIP_CMP = re.compile(r"compare\(([^)]*)\)")
+_CONST_REF = re.compile(r"%?(constant[\w\.\-]*)")
+_INLINE_CONST = re.compile(r"constant\((\d+)\)")
+
+
+_DEF = re.compile(r"^\s*%?([\w\.\-]+)\s*=\s*([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+
+_FREE_OPS = re.compile(
+    r"=\s*(?:\([^)]*\)|[a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"(tuple|get-tuple-element|bitcast|parameter|constant|iota)\(")
+
+
+def _analyze_comp(c: Computation):
+    # symbol table: instruction name -> (dtype, dims) for array-shaped results
+    symtab: dict[str, tuple[str, str]] = {}
+    for line in c.lines:
+        m = _DEF.match(line)
+        if m:
+            symtab[m.group(1)] = (m.group(2), m.group(3))
+    for line in c.lines:
+        # --- memory traffic (top-level ops move their operands/results) --
+        if "=" in line and not _FREE_OPS.search(line):
+            rm = _result_shape(line)
+            if rm:
+                # slicing ops only touch the slice, not the whole buffer
+                # (dynamic-slice reads its window; dynamic-update-slice is
+                # aliased in place and writes only the update)
+                mslice = re.search(
+                    r"\b(dynamic-slice|dynamic-update-slice|gather|scatter)\(",
+                    line)
+                def dim0(dims: str):
+                    head = dims.split(",")[0]
+                    return int(head) if head else None
+
+                if mslice:
+                    kind = mslice.group(1)
+                    if kind in ("dynamic-slice", "gather"):
+                        c.byte_records.append(
+                            (2 * _shape_elems(*rm.groups())[1], None))
+                    else:
+                        # update operand = second %ref inside the parens
+                        paren = line.find("(", line.find("="))
+                        refs = re.findall(r"%([\w\.\-]+)",
+                                          line[paren:])
+                        upd = next((r for r in refs[1:2] if r in symtab), None)
+                        shp = symtab[upd] if upd else rm.groups()
+                        c.byte_records.append(
+                            (2 * _shape_elems(*shp)[1], None))
+                    continue
+                c.byte_records.append(
+                    (_shape_elems(*rm.groups())[1], dim0(rm.group(2))))
+                paren = line.find("(", line.find("=", 0))
+                endp = line.find(")", paren)
+                for ref in re.findall(r"%([\w\.\-]+)",
+                                      line[paren:endp if endp > 0 else len(line)]):
+                    if ref in symtab:
+                        dt, dims = symtab[ref]
+                        c.byte_records.append(
+                            (_shape_elems(dt, dims)[1], dim0(dims)))
+        # --- calls -----------------------------------------------------
+        is_while = bool(re.search(r"\bwhile\(", line))
+        is_fusion = "fusion(" in line
+        for m in _CALL_ATTR.finditer(line):
+            attr = m.group(0).split("=")[0]
+            kind = "while_body" if (is_while and attr == "body") else \
+                   "while_cond" if (is_while and attr == "condition") else \
+                   ("fusion" if is_fusion else "call")
+            c.calls.append((m.group(1), kind))
+        m = _CALLS_LIST.search(line)
+        if m:
+            for nm in m.group(1).split(","):
+                nm = nm.strip().lstrip("%")
+                if nm:
+                    c.calls.append((nm, "call"))
+        # --- dot flops ---------------------------------------------------
+        if _DOT.search(line):
+            rm = _result_shape(line)
+            if rm:
+                relems, _ = _shape_elems(*rm.groups())
+                # lhs operand: first %ref (or inline shape) after "dot("
+                start = _DOT.search(line).end()
+                cm = _CONTRACT.search(line)
+                contract = 1
+                dims = None
+                om = re.compile(r"%([\w\.\-]+)").search(line, start)
+                inline = _SHAPE.search(line, start)
+                if inline and (not om or inline.start() < om.start()):
+                    dims = [int(x) for x in inline.group(2).split(",") if x]
+                elif om and om.group(1) in symtab:
+                    dims = [int(x) for x in symtab[om.group(1)][1].split(",") if x]
+                if dims is not None and cm:
+                    for ci in cm.group(1).split(","):
+                        if ci:
+                            contract *= dims[int(ci)]
+                c.flops += 2.0 * relems * contract
+        # --- collectives -------------------------------------------------
+        cm = _COLL_OP.search(line)
+        if cm and cm.group(2) != "-done":
+            kind = cm.group(1)
+            rm = _result_shape(line)
+            nbytes = 0
+            if rm is not None:
+                # tuple results: sum every shape before the op name
+                eq = line.find("=")
+                op_at = cm.start()
+                for sm in _SHAPE.finditer(line, eq + 1, op_at):
+                    nbytes += _shape_elems(*sm.groups())[1]
+            c.coll[kind] = c.coll.get(kind, 0) + nbytes
+
+
+def _trip_count(cond: Computation) -> int | None:
+    """Trip count from the loop condition: compare(%iv, %constant) LT."""
+    consts: dict[str, int] = {}
+    for line in cond.lines:
+        m = re.match(r"\s*%?([\w\.\-]+)\s*=.*constant\((\d+)\)", line)
+        if m:
+            consts[m.group(1)] = int(m.group(2))
+    for line in cond.lines:
+        if "compare(" in line:
+            im = _INLINE_CONST.search(line)
+            if im:
+                return int(im.group(1))
+            for ref in re.findall(r"%([\w\.\-]+)", line[line.find("compare("):]):
+                if ref in consts:
+                    return consts[ref]
+    if consts:
+        return max(consts.values())
+    return None
+
+
+def analyze(text: str, default_trip: int = 1) -> dict:
+    comps = _split_computations(text)
+    entry = comps.pop("__entry__")
+    for c in comps.values():
+        _analyze_comp(c)
+
+    # resolve trip counts for while bodies
+    trips: dict[str, int] = {}
+    for c in comps.values():
+        body = cond = None
+        for callee, kind in c.calls:
+            if kind == "while_body":
+                body = callee
+            elif kind == "while_cond":
+                cond = callee
+            if body and cond:
+                t = None
+                if cond in comps:
+                    t = _trip_count(comps[cond])
+                trips[body] = t if t else default_trip
+                trips[cond] = trips[body]
+                body = cond = None
+
+    # multiplicity via DFS from entry; fusion-internal computations do not
+    # contribute memory traffic (their values live in registers)
+    mult: dict[str, float] = {}
+    bmult: dict[str, float] = {}
+
+    def visit(name: str, m: float, bm: float, depth=0):
+        if depth > 50 or name not in comps:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        bmult[name] = bmult.get(name, 0.0) + bm
+        seen = set()
+        for callee, kind in comps[name].calls:
+            key = (callee, kind)
+            if key in seen:
+                continue  # attrs can repeat on one line
+            seen.add(key)
+            factor = trips.get(callee, default_trip) if kind in (
+                "while_body", "while_cond") else 1
+            visit(callee, m * factor,
+                  0.0 if kind == "fusion" else bm * factor, depth + 1)
+
+    visit(entry.name, 1.0, 1.0)
+
+    flops = 0.0
+    bytes_ = 0.0
+    coll: dict[str, float] = {}
+    per_comp = {}
+    for name, m in mult.items():
+        c = comps[name]
+        flops += m * c.flops
+        trip = trips.get(name)
+        cbytes = 0.0
+        for b, d0 in c.byte_records:
+            # scan-stacked buffers (leading dim == this loop's trip count)
+            # are sliced per iteration: charge one slice, not the stack
+            if trip and d0 == trip:
+                b = b / trip
+            cbytes += b
+        c.bytes = cbytes
+        bytes_ += bmult.get(name, 0.0) * cbytes
+        for k, v in c.coll.items():
+            coll[k] = coll.get(k, 0.0) + m * v
+        if c.flops or c.coll:
+            per_comp[name] = {"mult": m, "flops": c.flops, "coll": c.coll}
+    return {"flops": flops, "bytes": bytes_, "collective_bytes": coll,
+            "trips": trips, "per_comp": per_comp}

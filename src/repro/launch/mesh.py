@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — required because tests/benches must see one
+CPU device while only launch/dryrun.py forces 512 host devices.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) = (data, model), 256 chips (TPU v5e pod).
+    Multi-pod: (2, 16, 16) = (pod, data, model), 512 chips; DP gradient
+    reduction crosses the "pod" axis (DCN), everything else stays inside a
+    pod's ICI."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(n_data: int = 2, n_model: int = 2):
+    """Small mesh for multi-device subprocess tests (8 host devices)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def describe(mesh) -> str:
+    return f"mesh{dict(mesh.shape)}"

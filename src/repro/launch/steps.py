@@ -1,0 +1,88 @@
+"""Step-function builders shared by the trainer, the server, and the dry-run.
+
+Each builder returns (fn, in_shardings, out_shardings, abstract_inputs) so the
+dry-run can ``jit(fn, in_shardings=...).lower(*abstract).compile()`` without
+allocating anything, and the real launchers can feed concrete arrays.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ArchConfig, ShapeConfig
+from repro.models import api, lm
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm, \
+    cosine_schedule
+from repro.parallel import sharding
+
+
+def abstract_params(cfg: ArchConfig):
+    return jax.eval_shape(lambda: lm.init_params(cfg, jax.random.key(0)))
+
+
+def abstract_opt_state(cfg: ArchConfig, params_shape):
+    return jax.eval_shape(adamw_init, params_shape)
+
+
+def abstract_cache(cfg: ArchConfig, shape: ShapeConfig):
+    return jax.eval_shape(
+        lambda: lm.init_cache(cfg, shape.global_batch, shape.seq_len))
+
+
+def build_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh):
+    pspecs = sharding.param_specs(cfg, abstract_params(cfg), mesh)
+    ospecs = {"m": pspecs, "v": pspecs, "count": P()}
+    bspecs = sharding.batch_specs(cfg, shape, mesh)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(partial(lm.loss_fn, cfg))(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        lr = cosine_schedule(opt_state["count"])
+        params, opt_state = adamw_update(params, grads, opt_state, lr)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    in_sh = (pspecs, ospecs, bspecs)
+    out_sh = (pspecs, ospecs, {"loss": P(), "grad_norm": P()})
+    pshape = abstract_params(cfg)
+    abstract = (pshape, abstract_opt_state(cfg, pshape),
+                api.input_specs(cfg, shape))
+    return train_step, in_sh, out_sh, abstract
+
+
+def build_prefill_step(cfg: ArchConfig, shape: ShapeConfig, mesh):
+    pspecs = sharding.param_specs(cfg, abstract_params(cfg), mesh)
+    bspecs = sharding.batch_specs(cfg, shape, mesh)
+
+    def prefill_step(params, batch):
+        return lm.forward(cfg, params, batch)
+
+    in_sh = (pspecs, bspecs)
+    out_sh = None  # let the partitioner choose the logits layout
+    abstract = (abstract_params(cfg), api.input_specs(cfg, shape))
+    return prefill_step, in_sh, out_sh, abstract
+
+
+def build_decode_step(cfg: ArchConfig, shape: ShapeConfig, mesh):
+    pspecs = sharding.param_specs(cfg, abstract_params(cfg), mesh)
+    cshape = abstract_cache(cfg, shape)
+    cspecs = sharding.cache_specs(cfg, shape, mesh, cshape)
+    bspecs = sharding.batch_specs(cfg, shape, mesh)
+
+    def serve_step(params, cache, batch):
+        return lm.decode_step(cfg, params, cache, batch)
+
+    in_sh = (pspecs, cspecs, bspecs)
+    out_sh = (None, cspecs)  # cache layout must be stable across steps
+    abstract = (abstract_params(cfg), cshape, api.input_specs(cfg, shape))
+    return serve_step, in_sh, out_sh, abstract
+
+
+def build(cfg: ArchConfig, shape: ShapeConfig, mesh):
+    if shape.kind == "train":
+        return build_train_step(cfg, shape, mesh)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, shape, mesh)
+    return build_decode_step(cfg, shape, mesh)

@@ -1,0 +1,111 @@
+"""End-to-end training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3_8b --reduced \
+        --steps 200 --batch 8 --seq 256 --ckpt-dir /tmp/ckpt
+
+On this CPU container use --reduced (same-family miniature).  On a real
+slice the full config + production mesh apply unchanged: the jitted step is
+the same one the dry-run compiles for 256/512 chips.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ShapeConfig, get_config
+from repro.data import SyntheticLMData, make_train_iterator
+from repro.launch import steps as steps_mod
+from repro.models import lm
+from repro.optim import adamw_init
+from repro.runtime import StepWatchdog
+from repro.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
+
+
+def build_mesh():
+    n = len(jax.devices())
+    import math
+    model = math.gcd(n, 2) if n > 1 else 1
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3_8b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--watchdog-s", type=float, default=600.0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    shape = ShapeConfig("cli", "train", args.seq, args.batch)
+    mesh = build_mesh()
+    step_fn, in_sh, out_sh, _ = steps_mod.build(cfg, shape, mesh)
+
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.parallel.sharding import ctx_mesh
+
+    def named(tree):
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
+            tree, is_leaf=lambda x: isinstance(x, P) or x is None)
+
+    with ctx_mesh(mesh, style=cfg.parallel_style):
+        jstep = jax.jit(step_fn, in_shardings=named(in_sh),
+                        out_shardings=named(out_sh), donate_argnums=(0, 1))
+
+        params = lm.init_params(cfg, jax.random.key(args.seed))
+        opt = adamw_init(params)
+        start = 0
+        ckpt = AsyncCheckpointer(args.ckpt_dir) if args.ckpt_dir else None
+        if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+            start = latest_step(args.ckpt_dir)
+            params, opt = restore_checkpoint(
+                args.ckpt_dir, start, (params, opt))
+            print(f"[train] resumed from step {start}")
+
+        ds = SyntheticLMData(vocab=cfg.vocab, seq_len=args.seq,
+                             batch=args.batch, seed=args.seed)
+        it = make_train_iterator(ds, start_step=start)
+        wd = StepWatchdog(args.watchdog_s,
+                          lambda: print("[train] WATCHDOG: step timed out"))
+        losses = []
+        t0 = time.time()
+        for step, batch in it:
+            if step >= args.steps:
+                break
+            wd.start_step()
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            params, opt, metrics = jstep(params, opt, batch)
+            loss = float(metrics["loss"])
+            wd.end_step()
+            losses.append(loss)
+            if wd.straggling():
+                print(f"[train] straggler flag at step {step}")
+            if step % args.log_every == 0:
+                dt = time.time() - t0
+                print(f"[train] step {step} loss {loss:.4f} "
+                      f"({dt / max(1, step - start + 1):.2f}s/step)")
+            if ckpt and (step + 1) % args.ckpt_every == 0:
+                ckpt.save(step + 1, (params, opt))
+        it.close()
+        if ckpt:
+            ckpt.save(args.steps, (params, opt))
+            ckpt.wait()
+        print(f"[train] done: first loss {losses[0]:.4f} "
+              f"last loss {losses[-1]:.4f}")
+        return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Batch builders + ShapeDtypeStruct input specs for every (arch x shape).
+
+The modality frontends are STUBS per the assignment: whisper gets precomputed
+frame embeddings (B, enc_seq, D) and paligemma gets precomputed SigLIP patch
+embeddings (B, n_img_tokens, D)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ArchConfig, ShapeConfig
+
+
+def batch_shapes(cfg: ArchConfig, shape: ShapeConfig) -> dict[str, tuple]:
+    B, S = shape.global_batch, shape.seq_len
+    dt = cfg.dtype
+    if shape.kind in ("train", "prefill"):
+        n_txt = S - cfg.n_img_tokens if cfg.family == "vlm" else S
+        d = {"tokens": ((B, n_txt), "int32")}
+        if shape.kind == "train":
+            d["labels"] = ((B, n_txt), "int32")
+            d["mask"] = ((B, n_txt), "float32")
+        if cfg.family == "encdec":
+            d["frames"] = ((B, cfg.enc_seq, cfg.d_model), dt)
+        if cfg.family == "vlm":
+            d["patches"] = ((B, cfg.n_img_tokens, cfg.d_model), dt)
+        return d
+    # decode: one new token against a seq_len-deep cache
+    d = {"token": ((B, 1), "int32"), "pos": ((B,), "int32")}
+    if cfg.family == "encdec":
+        d["frames"] = ((B, cfg.enc_seq, cfg.d_model), dt)
+    return d
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict[str, jax.ShapeDtypeStruct]:
+    return {k: jax.ShapeDtypeStruct(shp, jnp.dtype(dt))
+            for k, (shp, dt) in batch_shapes(cfg, shape).items()}
+
+
+def make_batch(cfg: ArchConfig, shape: ShapeConfig, seed: int = 0):
+    """Concrete random batch (CPU smoke tests / examples)."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for k, (shp, dt) in batch_shapes(cfg, shape).items():
+        if dt == "int32":
+            hi = cfg.vocab if k in ("tokens", "labels", "token") else shape.seq_len - 1
+            if k == "pos":
+                out[k] = jnp.full(shp, shape.seq_len - 1, jnp.int32)
+            else:
+                out[k] = jnp.asarray(rng.integers(0, hi, size=shp), jnp.int32)
+        else:
+            out[k] = jnp.asarray(rng.normal(0, 1, size=shp), jnp.dtype(dt))
+    return out

@@ -1,0 +1,322 @@
+"""Unified model composition for all 10 assigned architectures.
+
+Layers are grouped into *periods* (cfg.period; 1 for uniform stacks, 8 for
+Jamba's 7-mamba+1-attention interleave).  Parameters of all periods are
+stacked on a leading axis and the stack is applied with ``jax.lax.scan`` so
+the lowered HLO is one period body regardless of depth — this is what keeps
+126-layer/512-device dry-run compiles tractable.  ``dense_prefix_layers``
+(DeepSeek-V2 / Kimi-K2 first dense layer) are applied unstacked.
+
+Three entry points per architecture:
+  * loss_fn(params, batch)      — training (next-token CE)
+  * prefill_fn(params, batch)   — full-sequence forward returning logits
+  * decode_fn(params, cache, batch) — one-token serve step with caches
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.models import layers as L
+
+
+# ---------------------------------------------------------------------------
+# per-position layer spec within a period
+# ---------------------------------------------------------------------------
+
+
+def period_specs(cfg: ArchConfig) -> list[tuple[str, str]]:
+    """[(mix_kind, ffn_kind)] for each position in a period (after the dense
+    prefix).  mix: attn|mla|mamba|rwkv.  ffn: mlp|moe|rwkv (fused)."""
+    specs = []
+    base = cfg.dense_prefix_layers
+    for pos in range(cfg.period):
+        li = base + pos
+        mix = cfg.layer_kind(li)
+        if mix == "rwkv":
+            ffn = "rwkv"
+        elif cfg.is_moe_layer(li):
+            ffn = "moe"
+        else:
+            ffn = "mlp"
+        specs.append((mix, ffn))
+    return specs
+
+
+def n_periods(cfg: ArchConfig) -> int:
+    body = cfg.n_layers - cfg.dense_prefix_layers
+    assert body % cfg.period == 0, (cfg.name, body, cfg.period)
+    return body // cfg.period
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(cfg: ArchConfig, key, mix: str, ffn: str, cross: bool):
+    ks = jax.random.split(key, 3)
+    p = {}
+    if mix == "attn":
+        p["mix"] = L.init_attn(cfg, ks[0])
+    elif mix == "mla":
+        p["mix"] = L.init_mla(cfg, ks[0])
+    elif mix == "mamba":
+        p["mix"] = L.init_mamba(cfg, ks[0])
+    elif mix == "rwkv":
+        p["mix"] = L.init_rwkv(cfg, ks[0])
+    if ffn == "moe":
+        p["ffn"] = L.init_moe(cfg, ks[1])
+    elif ffn == "mlp":
+        p["ffn"] = L.init_mlp(cfg, ks[1])
+    if cross:
+        p["cross"] = L.init_cross_attn(cfg, ks[2])
+    return p
+
+
+def init_params(cfg: ArchConfig, key):
+    dt = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    D, V = cfg.d_model, cfg.vocab
+    params = {
+        "embed": (jax.random.normal(keys[0], (V, D)) * 0.02).astype(dt),
+        "final_norm": jnp.ones((D,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(keys[1], (D, V)) * D ** -0.5).astype(dt)
+
+    cross = cfg.family == "encdec"
+    # dense prefix (unstacked)
+    prefix = []
+    for i in range(cfg.dense_prefix_layers):
+        prefix.append(_init_layer(cfg, jax.random.fold_in(keys[2], i),
+                                  cfg.layer_kind(i), "mlp", cross))
+    if prefix:
+        params["prefix"] = prefix
+
+    specs = period_specs(cfg)
+    NP = n_periods(cfg)
+
+    def one_period(k):
+        ks = jax.random.split(k, len(specs))
+        return {f"pos{i}": _init_layer(cfg, ks[i], m, f, cross)
+                for i, (m, f) in enumerate(specs)}
+
+    periods = [one_period(jax.random.fold_in(keys[3], i)) for i in range(NP)]
+    params["blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *periods)
+
+    if cfg.family == "encdec":
+        # encoder: uniform attn+mlp stack (bidirectional), own embed for frames
+        enc = [
+            {"mix": L.init_attn(cfg, jax.random.fold_in(keys[4], i)),
+             "ffn": L.init_mlp(cfg, jax.random.fold_in(keys[5], i))}
+            for i in range(cfg.n_enc_layers)]
+        params["encoder"] = jax.tree.map(lambda *xs: jnp.stack(xs), *enc)
+        params["enc_norm"] = jnp.ones((D,), dt)
+    if cfg.family == "vlm":
+        # projection of (stub) patch embeddings into the LM width
+        params["img_proj"] = (jax.random.normal(keys[6], (D, D)) * D ** -0.5).astype(dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _apply_layer(cfg, spec, p, x, positions, enc_out):
+    mix, ffn = spec
+    if mix == "attn":
+        x = L.attn_forward(cfg, p["mix"], x, positions)
+    elif mix == "mla":
+        x = L.mla_forward(cfg, p["mix"], x, positions)
+    elif mix == "mamba":
+        x = L.mamba_forward(cfg, p["mix"], x)
+    elif mix == "rwkv":
+        x = L.rwkv_forward(cfg, p["mix"], x)
+    if enc_out is not None and "cross" in p:
+        x = L.cross_attn_forward(cfg, p["cross"], x, enc_out)
+    if ffn == "moe":
+        x = L.moe_forward(cfg, p["ffn"], x)
+    elif ffn == "mlp":
+        x = L.mlp_forward(cfg, p["ffn"], x)
+    return x
+
+
+def _remat(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    policy = None
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    return jax.checkpoint(fn, policy=policy)
+
+
+def backbone(cfg: ArchConfig, params, x, positions, enc_out=None):
+    """Apply prefix + scanned periods + final norm.  x: (B,S,D)."""
+    specs = period_specs(cfg)
+    for i in range(cfg.dense_prefix_layers):
+        p = params["prefix"][i]
+        x = _remat(cfg, partial(_apply_layer, cfg, (cfg.layer_kind(i), "mlp")))(
+            p, x, positions, enc_out)
+
+    def period_body(x, pslice):
+        for i, spec in enumerate(specs):
+            x = _apply_layer(cfg, spec, pslice[f"pos{i}"], x, positions, enc_out)
+        return x
+
+    def scan_step(x, pslice):
+        return _remat(cfg, period_body)(x, pslice), None
+
+    x, _ = jax.lax.scan(scan_step, x, params["blocks"])
+    return L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def encode(cfg: ArchConfig, params, frames):
+    """Whisper encoder over (stub) frame embeddings (B, T_enc, D)."""
+    B, T, D = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+
+    def body(x, pslice):
+        def f(x):
+            x = L.attn_forward(cfg, pslice["mix"], x, positions, causal=False)
+            return L.mlp_forward(cfg, pslice["ffn"], x)
+        return _remat(cfg, f)(x), None
+
+    x, _ = jax.lax.scan(body, frames, params["encoder"])
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def logits_from_hidden(cfg: ArchConfig, params, h):
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = h @ head
+    return logits.astype(jnp.float32) if cfg.logits_fp32 else logits
+
+
+def embed_inputs(cfg: ArchConfig, params, batch):
+    """Token ids (+ modality stub embeddings) -> (x, positions, enc_out)."""
+    tokens = batch["tokens"]
+    x = params["embed"][tokens]
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = encode(cfg, params, batch["frames"].astype(x.dtype))
+    if cfg.family == "vlm":
+        img = batch["patches"].astype(x.dtype) @ params["img_proj"]
+        x = jnp.concatenate([img, x], axis=1)
+        S = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    return x, positions, enc_out
+
+
+def forward(cfg: ArchConfig, params, batch):
+    x, positions, enc_out = embed_inputs(cfg, params, batch)
+    h = backbone(cfg, params, x, positions, enc_out)
+    if cfg.family == "vlm":  # logits over the text positions only
+        h = h[:, cfg.n_img_tokens:]
+    return logits_from_hidden(cfg, params, h)
+
+
+def loss_fn(cfg: ArchConfig, params, batch):
+    logits = forward(cfg, params, batch)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("mask", jnp.ones_like(ll))
+    return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# decode (one token, KV/state caches)
+# ---------------------------------------------------------------------------
+
+
+def _init_layer_cache(cfg, mix, B, Smax, dt):
+    if mix == "attn":
+        return L.init_attn_cache(cfg, B, Smax, dt)
+    if mix == "mla":
+        return L.init_mla_cache(cfg, B, Smax, dt)
+    if mix == "mamba":
+        return L.init_mamba_cache(cfg, B, dt)
+    if mix == "rwkv":
+        return L.init_rwkv_cache(cfg, B, dt)
+    raise ValueError(mix)
+
+
+def init_cache(cfg: ArchConfig, B: int, Smax: int):
+    dt = jnp.dtype(cfg.dtype)
+    cache = {}
+    if cfg.dense_prefix_layers:
+        cache["prefix"] = [
+            _init_layer_cache(cfg, cfg.layer_kind(i), B, Smax, dt)
+            for i in range(cfg.dense_prefix_layers)]
+    specs = period_specs(cfg)
+    NP = n_periods(cfg)
+
+    def one(i):
+        return {f"pos{k}": _init_layer_cache(cfg, m, B, Smax, dt)
+                for k, (m, _) in enumerate(specs)}
+
+    per = [one(i) for i in range(NP)]
+    cache["blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+    return cache
+
+
+def _decode_layer(cfg, spec, p, x, cache, pos, enc_out):
+    mix, ffn = spec
+    if mix == "attn":
+        x, cache = L.attn_decode(cfg, p["mix"], x, cache, pos)
+    elif mix == "mla":
+        x, cache = L.mla_decode(cfg, p["mix"], x, cache, pos)
+    elif mix == "mamba":
+        x, cache = L.mamba_decode(cfg, p["mix"], x, cache)
+    elif mix == "rwkv":
+        x, cache = L.rwkv_decode(cfg, p["mix"], x, cache)
+    if enc_out is not None and "cross" in p:
+        x = L.cross_attn_forward(cfg, p["cross"], x, enc_out)
+    if ffn == "moe":
+        x = L.moe_forward(cfg, p["ffn"], x)
+    elif ffn == "mlp":
+        x = L.mlp_forward(cfg, p["ffn"], x)
+    return x, cache
+
+
+def decode_step(cfg: ArchConfig, params, cache, batch):
+    """batch: {token: (B,1) int32, pos: (B,) int32, [frames/patches stubs]}.
+    Returns (logits (B,1,V), new cache)."""
+    tok = batch["token"]
+    pos = batch["pos"]
+    x = params["embed"][tok]
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = encode(cfg, params, batch["frames"].astype(x.dtype))
+    specs = period_specs(cfg)
+    new_cache = {}
+    if cfg.dense_prefix_layers:
+        pc = []
+        for i in range(cfg.dense_prefix_layers):
+            x, c = _decode_layer(cfg, (cfg.layer_kind(i), "mlp"),
+                                 params["prefix"][i], x,
+                                 cache["prefix"][i], pos, enc_out)
+            pc.append(c)
+        new_cache["prefix"] = pc
+
+    def body(carry, sl):
+        x = carry
+        pslice, cslice = sl
+        ncs = {}
+        for i, spec in enumerate(specs):
+            x, nc = _decode_layer(cfg, spec, pslice[f"pos{i}"], x,
+                                  cslice[f"pos{i}"], pos, enc_out)
+            ncs[f"pos{i}"] = nc
+        return x, ncs
+
+    x, blocks_cache = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]))
+    new_cache["blocks"] = blocks_cache
+    h = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return logits_from_hidden(cfg, params, h), new_cache

@@ -1,0 +1,55 @@
+"""AdamW with global-norm clipping (pure pytree implementation).
+
+Moments are kept in the parameter dtype by default (the large-model memory
+budget in DESIGN.md); pass ``moment_dtype='float32'`` for small-scale runs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params, moment_dtype=None):
+    def zeros(p):
+        dt = jnp.dtype(moment_dtype) if moment_dtype else p.dtype
+        return jnp.zeros(p.shape, dt)
+
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gn
+
+
+def adamw_update(params, grads, state, lr, *, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1):
+    count = state["count"] + 1
+    cf = count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m1 = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v1 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(gf)
+        mhat = m1 / (1 - b1 ** cf)
+        vhat = v1 / (1 - b2 ** cf)
+        step = lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay *
+                     p.astype(jnp.float32))
+        return ((p.astype(jnp.float32) - step).astype(p.dtype),
+                m1.astype(m.dtype), v1.astype(v.dtype))
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v, "count": count}

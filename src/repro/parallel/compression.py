@@ -1,0 +1,44 @@
+"""int8 gradient compression for data-parallel reduction.
+
+Block-wise symmetric quantization (block = last dim) with an fp32 scale per
+block; the all-reduce moves 1 byte/grad element + 4/block instead of 2-4.
+Unbiasedness is preserved by stochastic rounding (seeded per step).  Used as
+an opt-in distributed-optimization trick (launch/train.py --grad-compress,
+hillclimb #2 in EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x, key):
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0 + 1e-12
+    y = x / scale
+    noise = jax.random.uniform(key, x.shape, jnp.float32, -0.5, 0.5)
+    q = jnp.clip(jnp.round(y + noise), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(grads, axis_name: str, key):
+    """psum a pytree of gradients in int8 (per-leaf blockwise scales).
+
+    The scales are psum-maxed first so every participant uses the same grid;
+    then int32-accumulated int8 payloads are reduced.  Returns fp32 grads."""
+    leaves, treedef = jax.tree.flatten(grads)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for leaf, k in zip(leaves, keys):
+        x = leaf.astype(jnp.float32)
+        scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0 + 1e-12
+        scale = jax.lax.pmax(scale, axis_name)          # shared grid
+        noise = jax.random.uniform(k, x.shape, jnp.float32, -0.5, 0.5)
+        q = jnp.clip(jnp.round(x / scale + noise), -127, 127).astype(jnp.int8)
+        acc = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+        out.append((acc.astype(jnp.float32) * scale / n).astype(leaf.dtype))
+    return jax.tree.unflatten(treedef, out)

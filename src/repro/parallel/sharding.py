@@ -1,0 +1,263 @@
+"""Declarative sharding rules: parameter/optimizer/batch/cache PartitionSpecs.
+
+Scheme (mesh axes ``("pod",) data, model``):
+  * FSDP   — weight matrices shard their *input-feature* dim over "data"
+             (and "pod" when present): ZeRO-3-style, all-gathered per layer.
+  * TP     — attention heads / FFN columns / MoE experts shard over tp.
+  * DP     — the batch shards over ("pod", "data").
+  * SP     — long-context decode (batch=1) shards KV caches over "data"
+             (sequence dimension); XLA inserts the flash-decode style
+             partial-softmax collectives.
+
+Rules are keyed on the parameter leaf name; a leading stacked-period axis
+(rank + 1) is padded with None automatically, so the same table serves both
+the scanned blocks and the unstacked prefix layers.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ArchConfig, ShapeConfig
+
+
+def _fsdp_axis(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+# --- trace-time activation constraints --------------------------------------
+# Model code calls constrain(x, "dp", None, tp, ...) at the points where
+# XLA's sharding propagation historically goes wrong (5-D attention einsums,
+# MoE dispatch).  The mesh is installed by the launchers around lowering; with
+# no mesh installed (unit tests, 1-device smoke) constrain() is a no-op.
+
+_CTX_MESH: list = []
+
+
+class ctx_mesh:
+    def __init__(self, mesh, style: str = "tp"):
+        self.mesh = mesh
+        self.style = style
+
+    def __enter__(self):
+        _CTX_MESH.append((self.mesh, self.style))
+        return self.mesh
+
+    def __exit__(self, *a):
+        _CTX_MESH.pop()
+
+
+def constrain(x, *axes):
+    """Tokens: "dp" = batch axes; "dpx" = dispatch-batch axes (the G dim of
+    MoE expert buffers — excludes the expert axis); "ep" = expert axis;
+    "model" = TP axis (dropped for ZeRO-only styles)."""
+    if not _CTX_MESH:
+        return x
+    mesh, style = _CTX_MESH[-1]
+    all_axes = tuple(a for a in ("pod", "data", "model")
+                     if a in mesh.axis_names)
+    nonmodel = tuple(a for a in all_axes if a != "model")
+
+    def res(a):
+        if style == "fsdp":
+            return {"dp": all_axes, "dpx": all_axes,
+                    "ep": None, "model": None}.get(a, a)
+        if style == "ep":
+            return {"dp": all_axes, "dpx": nonmodel,
+                    "ep": "model", "model": None}.get(a, a)
+        return {"dp": _fsdp_axis(mesh), "dpx": _fsdp_axis(mesh),
+                "ep": "model", "model": "model"}.get(a, a)
+
+    resolved = tuple(res(a) for a in axes)
+    spec = fit_spec(P(*resolved), x.shape, mesh)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec))
+
+
+def fit_spec(spec: P, shape: tuple, mesh: Mesh) -> P:
+    """Drop sharding axes that do not divide the corresponding dim (e.g. 8 KV
+    heads on a 16-way model axis -> replicate the heads instead).  Keeps the
+    dry-run honest: every spec is valid for every architecture."""
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        keep = list(axes)
+        while keep:
+            prod = 1
+            for a in keep:
+                prod *= mesh.shape[a]
+            if shape[i] % prod == 0:
+                break
+            keep.pop()
+        if not keep:
+            out.append(None)
+        elif len(keep) == 1:
+            out.append(keep[0])
+        else:
+            out.append(tuple(keep))
+    return P(*out)
+
+
+# leaf name -> spec for the UNSTACKED rank (trailing dims)
+def _rules(fsdp, tp="model"):
+    return {
+        # embeddings / head
+        "embed": P(tp, fsdp),
+        "lm_head": P(fsdp, tp),
+        "img_proj": P(fsdp, tp),
+        # attention
+        "wq": P(fsdp, tp, None),
+        "wk": P(fsdp, tp, None),
+        "wv": P(fsdp, tp, None),
+        "wo": P(tp, None, fsdp),
+        # MLA
+        "wdq": P(fsdp, None),
+        "wuq": P(None, tp, None),
+        "wdkv": P(fsdp, None),
+        "wukv": P(None, tp, None),
+        # FFN
+        "w_gate": P(fsdp, tp),
+        "w_up": P(fsdp, tp),
+        "w_down": P(tp, fsdp),
+        "router": P(fsdp, None),
+        # mamba
+        "w_in": P(fsdp, tp),
+        "conv_w": P(None, tp),
+        "w_bc": P(tp, None),
+        "w_dt": P(tp, None),
+        "w_dt2": P(None, tp),
+        "a_log": P(tp, None),
+        "d_skip": P(tp),
+        "w_out": P(tp, fsdp),
+        # rwkv
+        "wr": P(fsdp, tp),
+        "ck": P(fsdp, tp),
+        "cv": P(tp, fsdp),
+        "u_bonus": P(tp),
+    }
+
+
+_MOE_3D = {"w_gate", "w_up", "w_down"}  # (E, D, F)-shaped under "ffn"
+
+
+def param_specs(cfg: ArchConfig, params_shape, mesh: Mesh):
+    """PartitionSpec pytree matching a params(-shaped) pytree."""
+    if cfg.parallel_style == "fsdp":
+        # ZeRO-only: no tensor parallelism; every weight shards its feature
+        # dim over ALL mesh axes and the batch spans them too
+        fsdp = tuple(a for a in ("pod", "data", "model")
+                     if a in mesh.axis_names)
+        tp = None
+    elif cfg.parallel_style == "ep":
+        # experts keep the "model" axis (EP); everything else is ZeRO over
+        # the data axes only
+        fsdp = _fsdp_axis(mesh)
+        tp = None
+    else:
+        fsdp = _fsdp_axis(mesh)
+        tp = "model"
+    rules = _rules(fsdp, tp)
+    # expert-parallel axis: kept for styles "tp" and "ep"
+    ep = "model" if cfg.parallel_style in ("tp", "ep") else None
+    # rwkv shares names with attention outputs
+    rules["wdecay"] = rules["wg"] = rules["wr"]
+
+    def spec_for(path, leaf):
+        names = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+        name = names[-1]
+        rank = len(leaf.shape)
+        base = rules.get(name)
+        if name == "wo" and cfg.family == "ssm":
+            base = P(tp, fsdp)  # rwkv wo is (D, D)
+        if base is None and name in ("wk", "wv"):
+            base = rules["wq"]
+        if base is None:
+            base = P()  # norms, biases, small vectors: replicated
+        # MoE expert tensors carry a leading E dim -> EP over "model"
+        if name in _MOE_3D and rank - sum(
+                1 for n in names if n == "blocks") >= 3 and "shared" not in names:
+            # (E, D, F) / (E, F, D): experts on the EP axis, features on fsdp
+            base = P(ep, fsdp, None) if name in ("w_gate", "w_up") \
+                else P(ep, None, fsdp)
+        pad = rank - len(base)
+        if pad < 0:
+            base = P(*base[-rank:])
+            pad = 0
+        return fit_spec(P(*([None] * pad), *base), leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_shape)
+
+
+def opt_specs(pspecs):
+    return {"m": pspecs, "v": pspecs, "count": P()}
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh):
+    if cfg.parallel_style in ("fsdp", "ep"):
+        axes = tuple(a for a in ("pod", "data", "model")
+                     if a in mesh.axis_names)
+    else:
+        axes = (("pod", "data") if "pod" in mesh.axis_names else ("data",))
+    dp = P(axes)
+    total_dp = 1
+    for a in axes:
+        total_dp *= mesh.shape[a]
+    shardable = shape.global_batch % total_dp == 0
+    b0 = dp[0] if shardable else None
+    specs = {}
+    from repro.models.api import batch_shapes
+    for k, (shp, _) in batch_shapes(cfg, shape).items():
+        specs[k] = fit_spec(P(b0, *([None] * (len(shp) - 1))), shp, mesh)
+    return specs
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh, cache_shape):
+    """KV/state cache shardings.  decode_32k shards batch; long_500k (B=1)
+    shards the sequence axis of attention caches over "data" (SP)."""
+    dp = ("pod", "data") if "pod" in mesh.axis_names else "data"
+    total_dp = mesh.shape["data"] * (mesh.shape.get("pod", 1))
+    batch_ok = shape.global_batch % total_dp == 0
+
+    def spec_for(path, leaf):
+        names = [getattr(k, "key", None) for k in path]
+        name = names[-1]
+        rank = len(leaf.shape)
+        stacked = 1 if "blocks" in names else 0
+        if name in ("k", "v", "ckv"):          # (B, Smax, K, hd) / (B,Smax,R)
+            if batch_ok:
+                # batch over the data axes AND the cache sequence over
+                # "model" — otherwise a 32k-deep cache leaves the model
+                # axis idle and costs 16x the per-device HBM (found via the
+                # kimi decode memory analysis, EXPERIMENTS.md §Dry-run)
+                inner = [dp, "model"] + [None] * (rank - stacked - 2)
+            else:  # SP: shard the sequence dim
+                inner = [None, "data"] + [None] * (rank - stacked - 2)
+            return P(*([None] * stacked), *inner)
+        if name in ("s",):                      # rwkv state (B, H, hd, hd)
+            if batch_ok:
+                inner = [dp] + [None] * (rank - stacked - 1)
+            else:
+                inner = [None, "model"] + [None] * (rank - stacked - 2)
+            return P(*([None] * stacked), *inner)
+        if name in ("h",):                      # mamba (B, di, N)
+            if batch_ok:
+                inner = [dp] + [None] * (rank - stacked - 1)
+            else:
+                inner = [None, "model"] + [None] * (rank - stacked - 2)
+            return P(*([None] * stacked), *inner)
+        if batch_ok:
+            return P(*([None] * stacked), dp, *([None] * (rank - stacked - 1)))
+        return P(*([None] * rank))
+
+    def fitted(path, leaf):
+        return fit_spec(spec_for(path, leaf), leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(fitted, cache_shape)
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

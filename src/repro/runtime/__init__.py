@@ -1,0 +1,5 @@
+from .fault_tolerance import FaultTolerantLoop, StepWatchdog
+from .serving import ContinuousBatcher, Request
+
+__all__ = ["FaultTolerantLoop", "StepWatchdog", "ContinuousBatcher",
+           "Request"]

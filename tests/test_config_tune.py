@@ -1,0 +1,34 @@
+"""The tuned-config policy must encode the §Perf findings exactly."""
+from repro.config import SHAPES, get_config, tune
+
+
+def test_dense_small_train_goes_zero_only():
+    cfg = tune(get_config("rwkv6_3b"), SHAPES["train_4k"])
+    assert cfg.parallel_style == "fsdp"
+    assert cfg.remat == "dots" and cfg.scores_bf16
+
+
+def test_unshardable_batch_keeps_tp():
+    # prefill_32k has global_batch 32 < 256 chips: pure DP would replicate
+    cfg = tune(get_config("rwkv6_3b"), SHAPES["prefill_32k"])
+    assert cfg.parallel_style == "tp"
+    cfg = tune(get_config("llama3_8b"), SHAPES["decode_32k"])
+    assert cfg.parallel_style == "tp"
+
+
+def test_moe_keeps_tp():
+    cfg = tune(get_config("kimi_k2_1t_a32b"), SHAPES["train_4k"])
+    assert cfg.parallel_style == "tp"
+
+
+def test_405b_fits_zero_only():
+    cfg = tune(get_config("llama3_405b"), SHAPES["train_4k"])
+    assert cfg.parallel_style == "fsdp"   # 3*2*405e9/256 = 9.5 GB/chip
+
+
+def test_all_cells_have_a_tuned_config():
+    from repro.config import ARCH_IDS
+    for aid in ARCH_IDS:
+        for s in SHAPES.values():
+            cfg = tune(get_config(aid), s)
+            assert cfg.parallel_style in ("tp", "fsdp")

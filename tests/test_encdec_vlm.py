@@ -1,0 +1,58 @@
+"""Whisper (enc-dec) and PaliGemma (VLM) specific behaviour."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import get_config
+from repro.models import lm
+
+
+def test_whisper_decode_matches_teacher_forcing():
+    cfg = dataclasses.replace(get_config("whisper_small", reduced=True),
+                              dtype="float32")
+    params = lm.init_params(cfg, jax.random.key(0))
+    B, S = 2, 6
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    frames = jnp.asarray(rng.normal(size=(B, cfg.enc_seq, cfg.d_model)),
+                         jnp.float32)
+    full = lm.forward(cfg, params, {"tokens": tokens, "frames": frames})
+    cache = lm.init_cache(cfg, B, S)
+    logits = None
+    for t in range(S):
+        batch = {"token": tokens[:, t:t + 1],
+                 "pos": jnp.full((B,), t, jnp.int32),
+                 "frames": frames}
+        logits, cache = lm.decode_step(cfg, params, cache, batch)
+    np.testing.assert_allclose(np.asarray(logits[:, 0]),
+                               np.asarray(full[:, -1]), rtol=2e-3, atol=2e-3)
+
+
+def test_whisper_encoder_is_used():
+    cfg = dataclasses.replace(get_config("whisper_small", reduced=True),
+                              dtype="float32")
+    params = lm.init_params(cfg, jax.random.key(1))
+    B, S = 1, 4
+    tokens = jnp.zeros((B, S), jnp.int32)
+    f1 = jnp.zeros((B, cfg.enc_seq, cfg.d_model))
+    f2 = jnp.ones((B, cfg.enc_seq, cfg.d_model))
+    l1 = lm.forward(cfg, params, {"tokens": tokens, "frames": f1})
+    l2 = lm.forward(cfg, params, {"tokens": tokens, "frames": f2})
+    assert float(jnp.max(jnp.abs(l1 - l2))) > 1e-6
+
+
+def test_vlm_patches_shift_text_logits():
+    cfg = dataclasses.replace(get_config("paligemma_3b", reduced=True),
+                              dtype="float32")
+    params = lm.init_params(cfg, jax.random.key(2))
+    B = 1
+    n_txt = 8
+    tokens = jnp.zeros((B, n_txt), jnp.int32)
+    p1 = jnp.zeros((B, cfg.n_img_tokens, cfg.d_model))
+    p2 = jnp.ones((B, cfg.n_img_tokens, cfg.d_model))
+    l1 = lm.forward(cfg, params, {"tokens": tokens, "patches": p1})
+    l2 = lm.forward(cfg, params, {"tokens": tokens, "patches": p2})
+    assert l1.shape == (B, n_txt, cfg.vocab)  # text positions only
+    assert float(jnp.max(jnp.abs(l1 - l2))) > 1e-6

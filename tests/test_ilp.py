@@ -1,0 +1,66 @@
+"""Unit tests for the numpy simplex / branch-and-bound ILP solver."""
+import numpy as np
+import pytest
+
+from repro.core.ilp import brute_force_ilp, solve_ilp, solve_lp
+
+
+def test_lp_basic():
+    # min -x-y st x+y<=4, x<=3  -> x=3,y=1
+    r = solve_lp([-1, -1], A_ub=[[1, 1], [1, 0]], b_ub=[4, 3])
+    assert r.ok
+    assert abs(r.fun + 4.0) < 1e-6
+
+
+def test_lp_infeasible():
+    r = solve_lp([1], A_ub=[[1], [-1]], b_ub=[1, -2])  # x<=1 and x>=2
+    assert r.status == "infeasible"
+
+
+def test_lp_unbounded():
+    r = solve_lp([-1], A_ub=[[-1]], b_ub=[0])
+    assert r.status == "unbounded"
+
+
+def test_lp_equality():
+    # min x+y st x+2y==4, x>=0,y>=0 -> y=2
+    r = solve_lp([1, 1], A_eq=[[1, 2]], b_eq=[4])
+    assert r.ok and abs(r.fun - 2.0) < 1e-6
+
+
+def test_ilp_matches_brute_force_random():
+    rng = np.random.default_rng(7)
+    for trial in range(60):
+        n = int(rng.integers(2, 5))
+        m = int(rng.integers(1, 4))
+        c = rng.integers(-4, 5, size=n).astype(float)
+        A = rng.integers(-3, 4, size=(m, n)).astype(float)
+        b = rng.integers(-4, 12, size=m).astype(float)
+        bounds = [(0, int(rng.integers(1, 6))) for _ in range(n)]
+        got = solve_ilp(c, A_ub=A, b_ub=b, bounds=bounds)
+        want = brute_force_ilp(c, A_ub=A, b_ub=b, bounds=bounds)
+        assert got.status == want.status, (trial, got.status, want.status)
+        if got.ok:
+            assert abs(got.fun - want.fun) < 1e-6, (trial, got.fun, want.fun)
+
+
+def test_ilp_with_equalities_random():
+    rng = np.random.default_rng(11)
+    for trial in range(40):
+        n = int(rng.integers(2, 5))
+        c = rng.integers(-3, 4, size=n).astype(float)
+        Ae = rng.integers(-2, 3, size=(1, n)).astype(float)
+        be = rng.integers(0, 6, size=1).astype(float)
+        bounds = [(int(rng.integers(-2, 1)), int(rng.integers(2, 5)))
+                  for _ in range(n)]
+        got = solve_ilp(c, A_eq=Ae, b_eq=be, bounds=bounds)
+        want = brute_force_ilp(c, A_eq=Ae, b_eq=be, bounds=bounds)
+        assert got.status == want.status, trial
+        if got.ok:
+            assert abs(got.fun - want.fun) < 1e-6, (trial, got.fun, want.fun)
+
+
+def test_ilp_negative_bounds_shift():
+    # min x st x >= -3  -> -3
+    r = solve_ilp([1.0], bounds=[(-3, 3)])
+    assert r.ok and r.fun == -3 and r.x[0] == -3

@@ -1,0 +1,78 @@
+"""The ILP scheduler applied to pipeline parallelism + overlap planning."""
+import pytest
+
+from repro.core import overlap, pipeline_ilp as pp
+
+
+def test_schedule_is_dependency_clean():
+    s = pp.synthesize(4, 8, t_f=1, t_b=2)
+    # activations flow forward: stage s+1 fwd strictly after stage s fwd
+    for a in range(3):
+        assert s.fwd_start[a + 1] > s.fwd_start[a]
+    # gradients flow backward
+    for a in range(3):
+        assert s.bwd_start[a] > s.bwd_start[a + 1]
+    # bwd of a stage after its own fwd
+    for a in range(4):
+        assert s.bwd_start[a] > s.fwd_start[a]
+    for m in range(8):
+        for a in range(3):
+            assert s.fwd_tick(a + 1, m) >= s.fwd_tick(a, m) + 1
+            assert s.bwd_tick(a, m) >= s.bwd_tick(a + 1, m) + 2
+
+
+def test_steady_state_ii_is_optimal():
+    """Each device runs one fwd (t_f) + one bwd (t_b) per microbatch:
+    II = t_f + t_b is a lower bound; the ILP must reach it."""
+    s = pp.synthesize(4, 6, t_f=1, t_b=2)
+    assert s.ii == 3
+    s = pp.synthesize(3, 6, t_f=2, t_b=2)
+    assert s.ii == 4
+
+
+def test_fwd_only_ii_1():
+    s = pp.synthesize(4, 8, t_f=1, backward=False)
+    assert s.ii == 1
+    assert s.fwd_start == sorted(s.fwd_start)
+
+
+def test_memory_beats_gpipe():
+    """The derived (1F1B-class) schedule must hold far fewer live
+    activations than all-forward-then-all-backward."""
+    S, M = 4, 16
+    s = pp.synthesize(S, M, t_f=1, t_b=2)
+    assert s.peak_live_activations < S * M / 2
+
+
+def test_latency_beats_sequential():
+    S, M = 4, 8
+    s = pp.synthesize(S, M, t_f=1, t_b=2)
+    assert s.latency < 0.6 * pp.sequential_latency(S, M)
+
+
+def test_encdec_multiconsumer_graph():
+    """Encoder output consumed by several decoder stages (non-SPSC) — the
+    exact pattern FIFO dataflow rejects — must still schedule."""
+    s = pp.synthesize(5, 6, t_f=1, backward=False, cross_from=1)
+    assert s.ii == 1
+    assert s.latency < pp.sequential_latency(5, 6, 1, 0) + 6
+
+
+def test_ring_overlap_plan():
+    plan = overlap.plan_ring_overlap(8)
+    assert plan.ii == 1            # send + matmul overlap per tick
+    assert plan.latency < plan.serial_latency
+    plan2 = overlap.plan_ring_overlap(8, send_ticks=2, mm_ticks=1)
+    assert plan2.ii == 2           # link-bound: II follows the slower port
+
+
+def test_interleaved_negative_result():
+    """Megatron-style virtual-stage interleaving does NOT pay under the
+    affine (single-II) schedule class: the chunk chain is 2x longer at the
+    same steady-state II, so fill/drain grows — the ILP quantifies what the
+    schedule-class restriction costs (EXPERIMENTS.md §Pipeline).  Real
+    interleaving gains need per-chunk phase offsets (non-affine warmup)."""
+    si = pp.synthesize_interleaved(4, 2, 8, t_f=1, t_b=2)
+    sn = pp.synthesize(4, 8, t_f=2, t_b=4)  # same per-device work
+    assert si.ii == sn.ii == 6              # steady state identical
+    assert si.latency >= sn.latency         # fill/drain is what differs
