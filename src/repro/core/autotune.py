@@ -3,8 +3,11 @@ of every loop that lacks a programmer-specified ``pipeline`` II.
 
 Feasibility of an II assignment = the scheduling system admits a solution
 (Bellman-Ford finds no positive cycle) and loop-counter occupancy holds.
-Loops are tuned innermost-first; memory-dependence-ILP results are cached
-across probes (DepAnalysis keys them on the relevant II values).
+Loops are tuned innermost-first.  Each probe is incremental (DESIGN.md §5):
+DepAnalysis enumerated the conflicting pairs once and caches each pair's
+edge on the IIs of the loops in its iteration vectors, so a probe that
+moves one loop's II only re-solves the dependences touching that loop —
+and those via the closed-form fast path, not branch-and-bound.
 """
 from __future__ import annotations
 
@@ -59,16 +62,21 @@ def autotune(p: Program, dep: Optional[DepAnalysis] = None,
     for loop in tunable:
         lo = _occupancy_floor(loop, iis)
         hi = max(lo, iis[loop.uid])
+
+        def probe(ii: int) -> bool:
+            iis[loop.uid] = ii
+            return feasible(p, iis, dep)
+
         # ensure hi feasible (double if the conservative bound still fails,
         # e.g. due to cross-nest port serialization pressure)
         guard = 0
-        while not feasible(p, {**iis, loop.uid: hi}, dep) and guard < 8:
+        while not probe(hi) and guard < 8:
             hi *= 2
             guard += 1
         best = hi
         while lo <= hi:
             mid = (lo + hi) // 2
-            if feasible(p, {**iis, loop.uid: mid}, dep):
+            if probe(mid):
                 best = mid
                 hi = mid - 1
             else:

@@ -17,6 +17,20 @@ sequential time with large strides; both are equivalent for constant bounds).
 Port conflicts use the same machinery as pseudo-dependences with the address
 equality restricted to completely-partitioned dims (bank equality), exactly
 the paper's "assume all operations on the same port have a data dependence".
+
+Fast path (DESIGN.md §4): the dependence ILPs produced by affine programs
+with constant bounds are almost always *separable* after two rewrites —
+merging the prefix-equal ivs of the happens-before case and switching the
+common-suffix ivs to difference variables d_l = iv_snk,l - iv_src,l.  What
+remains is a box-constrained integer program whose equality rows nearly
+always touch one variable (pin it: divisibility + bounds check) or two
+(a 2-var linear Diophantine equation: GCD feasibility, then minimize a
+linear objective over an interval of the solution parameter).  These are
+solved in closed form; only genuinely coupled systems (a residual component
+with >=3 variables or >=3 equations) fall back to branch-and-bound
+``solve_ilp``.  A crucial corollary: the *feasible region* of every case is
+II-independent (IIs only weight the objective), so pair/case feasibility is
+decided once at construction and never re-examined across autotuner probes.
 """
 from __future__ import annotations
 
@@ -92,125 +106,319 @@ def _common_prefix_len(a: tuple[Loop, ...], b: tuple[Loop, ...]) -> int:
     return n
 
 
-class DepAnalysis:
-    """Caches memory-dependence-ILP results across autotuner II probes."""
+# ---------------------------------------------------------------------------
+# Closed-form affine slack solver (the fast path)
+# ---------------------------------------------------------------------------
 
-    def __init__(self, p: Program):
+_FALLBACK = object()  # sentinel: case not separable, use the ILP
+
+
+def _ext_gcd(a: int, b: int) -> tuple[int, int, int]:
+    """(g, p, q) with a*p + b*q == g == gcd(a, b) (g >= 0)."""
+    old_r, r = a, b
+    old_p, p = 1, 0
+    old_q, q = 0, 1
+    while r:
+        quo = old_r // r
+        old_r, r = r, old_r - quo * r
+        old_p, p = p, old_p - quo * p
+        old_q, q = q, old_q - quo * q
+    if old_r < 0:
+        old_r, old_p, old_q = -old_r, -old_p, -old_q
+    return old_r, old_p, old_q
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -((-a) // b)
+
+
+def _param_interval(v0: int, s: int, lo: int, hi: int) -> tuple[int, int]:
+    """t-range keeping v0 + s*t inside [lo, hi] (s != 0)."""
+    if s > 0:
+        return _ceil_div(lo - v0, s), (hi - v0) // s
+    return _ceil_div(hi - v0, s), (lo - v0) // s
+
+
+def _min_diophantine_2var(a: int, b: int, e: int,
+                          lu: int, hu: int, lv: int, hv: int,
+                          cu: int, cv: int):
+    """min cu*u + cv*v  s.t.  a*u + b*v == e, u in [lu,hu], v in [lv,hv],
+    all integer.  Returns the value or None (infeasible)."""
+    g, p, q = _ext_gcd(a, b)
+    if e % g:
+        return None
+    k = e // g
+    u0, v0 = p * k, q * k
+    su, sv = b // g, -(a // g)
+    tlo1, thi1 = _param_interval(u0, su, lu, hu)
+    tlo2, thi2 = _param_interval(v0, sv, lv, hv)
+    tlo, thi = max(tlo1, tlo2), min(thi1, thi2)
+    if tlo > thi:
+        return None
+    slope = cu * su + cv * sv
+    t = tlo if slope >= 0 else thi
+    return cu * (u0 + su * t) + cv * (v0 + sv * t)
+
+
+def _solve_separable(vars: dict, rows: list):
+    """min sum c_v * v over integer vars with box bounds and equality rows.
+
+    ``vars``: vid -> (lo, hi, c).  ``rows``: list of (dict vid->coeff, rhs).
+    Returns the optimum (int), None (infeasible), or _FALLBACK when a
+    residual component is not closed-form solvable.
+    """
+    for lo, hi, _ in vars.values():
+        if lo > hi:
+            return None
+
+    fixed: dict = {}
+    rows = [(dict(coeffs), rhs) for coeffs, rhs in rows]
+    while True:
+        nrows = []
+        for coeffs, rhs in rows:
+            nc = {}
+            for v, a in coeffs.items():
+                if v in fixed:
+                    rhs -= a * fixed[v]
+                else:
+                    nc[v] = a
+            if not nc:
+                if rhs != 0:
+                    return None
+                continue
+            nrows.append((nc, rhs))
+        rows = nrows
+        newly = False
+        for coeffs, rhs in rows:
+            if len(coeffs) == 1:
+                (v, a), = coeffs.items()
+                if v in fixed:
+                    if a * fixed[v] != rhs:
+                        return None
+                    continue
+                if rhs % a:
+                    return None
+                val = rhs // a
+                lo, hi, _ = vars[v]
+                if not (lo <= val <= hi):
+                    return None
+                fixed[v] = val
+                newly = True
+        if not newly:
+            break
+
+    total = sum(vars[v][2] * val for v, val in fixed.items())
+
+    # connected components over the residual rows (each row now has >= 2
+    # vars, singletons were eliminated).  A row bridging two existing
+    # components implies >= 4 coupled variables — beyond the closed form —
+    # so bail out immediately instead of merging.
+    comp: dict = {}
+    comp_rows: dict[int, list] = {}
+    next_root = 0
+    for coeffs, rhs in rows:
+        roots = {comp[v] for v in coeffs if v in comp}
+        if len(roots) > 1:
+            return _FALLBACK
+        if roots:
+            root = roots.pop()
+        else:
+            root = next_root
+            next_root += 1
+        for v in coeffs:
+            comp[v] = root
+        comp_rows.setdefault(root, []).append((coeffs, rhs))
+
+    for crows in comp_rows.values():
+        cvars = sorted({v for coeffs, _ in crows for v in coeffs})
+        if len(cvars) != 2:
+            return _FALLBACK
+        u, v = cvars
+        if len(crows) == 2:
+            (c1, e1), (c2, e2) = crows
+            a1, b1 = c1.get(u, 0), c1.get(v, 0)
+            a2, b2 = c2.get(u, 0), c2.get(v, 0)
+            det = a1 * b2 - a2 * b1
+            if det != 0:
+                un, vn = e1 * b2 - e2 * b1, a1 * e2 - a2 * e1
+                if un % det or vn % det:
+                    return None
+                uu, vv = un // det, vn // det
+                if not (vars[u][0] <= uu <= vars[u][1] and
+                        vars[v][0] <= vv <= vars[v][1]):
+                    return None
+                total += vars[u][2] * uu + vars[v][2] * vv
+                continue
+            # proportional LHS: consistent -> one row; else infeasible
+            if a1 * e2 != a2 * e1 or b1 * e2 != b2 * e1:
+                return None
+            crows = [(c1, e1)]
+        if len(crows) != 1:
+            return _FALLBACK
+        coeffs, rhs = crows[0]
+        val = _min_diophantine_2var(coeffs[u], coeffs[v], rhs,
+                                    vars[u][0], vars[u][1],
+                                    vars[v][0], vars[v][1],
+                                    vars[u][2], vars[v][2])
+        if val is None:
+            return None
+        total += val
+
+    for v, (lo, hi, c) in vars.items():
+        if v in fixed or v in comp:
+            continue
+        total += c * lo if c >= 0 else c * hi
+    return total
+
+
+def _fast_slack_case(la: tuple[Loop, ...], lb: tuple[Loop, ...], pfx: int,
+                     carry_level: Optional[int], rows: list,
+                     iis: dict[int, int]):
+    """Closed-form solve of one happens-before case.
+
+    ``rows`` are the address-equality rows over columns x_0..x_{nx-1},
+    y_0..y_{ny-1} (source / sink iteration vectors).  Returns the minimum
+    slack (int), None (case infeasible), or _FALLBACK.
+    """
+    nx, ny = len(la), len(lb)
+    P = carry_level if carry_level is not None else pfx
+
+    nrows = []
+    for coeffs, rhs in rows:
+        nc = {}
+        for k in range(P):  # prefix-equal: x_k == y_k merged into one var
+            a = coeffs.get(k, 0) + coeffs.get(nx + k, 0)
+            if a:
+                nc[("m", k)] = a
+        for k in range(P, pfx):  # common suffix: d_k = y_k - x_k
+            cx, cy = coeffs.get(k, 0), coeffs.get(nx + k, 0)
+            if cx != -cy:
+                return _FALLBACK  # not diagonal-coupled; keep the ILP exact
+            if cy:
+                nc[("d", k)] = cy
+        for i in range(pfx, nx):
+            a = coeffs.get(i, 0)
+            if a:
+                nc[("x", i)] = a
+        for j in range(pfx, ny):
+            a = coeffs.get(nx + j, 0)
+            if a:
+                nc[("y", j)] = a
+        nrows.append((nc, rhs))
+
+    # variable table: vid -> (lo, hi, objective coefficient).
+    # Prefix-merged vars contribute 0 to the objective (same loop, same II);
+    # difference vars contribute +II_l; split vars keep their signed II.
+    vars: dict = {}
+    for k in range(P):
+        l = la[k]
+        vars[("m", k)] = (l.lb, l.ub - 1, 0)
+    for k in range(P, pfx):
+        l = la[k]
+        span = l.ub - 1 - l.lb
+        lo = 1 if carry_level is not None and k == carry_level else -span
+        vars[("d", k)] = (lo, span, iis[l.uid])
+    for i in range(pfx, nx):
+        l = la[i]
+        vars[("x", i)] = (l.lb, l.ub - 1, -iis[l.uid])
+    for j in range(pfx, ny):
+        l = lb[j]
+        vars[("y", j)] = (l.lb, l.ub - 1, iis[l.uid])
+
+    return _solve_separable(vars, nrows)
+
+
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class _Pair:
+    """One conflicting-access candidate, fully analyzed at construction."""
+
+    X: Access
+    Y: Access
+    kind: str       # RAW | WAR | WAW | PORT
+    delay: int
+    array: str
+    rows: list      # address-equality rows (dict col->coeff, rhs)
+    cases: list     # feasible happens-before cases: carry levels and/or None
+    loop_uids: tuple[int, ...]  # IIs the slack actually depends on
+
+
+class DepAnalysis:
+    """Memory-dependence analysis, incremental across autotuner II probes.
+
+    Construction enumerates every conflicting-access pair ONCE, builds its
+    address-equality rows, and case-splits happens-before — discarding the
+    cases (and whole pairs) whose feasible region is empty, which is an
+    II-independent property.  ``memory_edges(iis)`` then only re-evaluates
+    the objective of the surviving cases, cached per pair on the IIs of the
+    loops actually appearing in that pair's iteration vectors, so a binary
+    search probing one loop's II recomputes only the edges touching it.
+    """
+
+    def __init__(self, p: Program, fastpath: bool = True,
+                 crosscheck: bool = False):
         self.p = p
         self.accesses = collect_accesses(p)
         self.pos = position_keys(p)
-        self._cache: dict = {}
+        self.fastpath = fastpath
+        self.crosscheck = crosscheck
+        self.fallback_cases = 0   # cases the closed form could not take
+        self.fast_cases = 0
+        self._edge_cache: dict = {}
+        self._static_edges: Optional[list[DepEdge]] = None
+        self._nodes: Optional[list] = None
+        self._pairs: list[_Pair] = self._enumerate_pairs()
+
+    def all_nodes(self) -> list:
+        """Every op/loop node, cached (reused across autotuner probes)."""
+        if self._nodes is None:
+            self._nodes = [n for n, _ in self.p.walk()]
+        return self._nodes
 
     # ------------------------------------------------------------------
-    def _slack_case(self, X: Access, Y: Access, carry_level: Optional[int],
-                    eq_dims: Optional[list[int]], iis: dict[int, int]) -> Optional[int]:
-        """Solve one memory-dependence ILP case; None if infeasible (no dep)."""
+    # pair enumeration (once)
+    # ------------------------------------------------------------------
+    def _address_rows(self, X: Access, Y: Access,
+                      eq_dims: Optional[list[int]]) -> list:
+        """Equality rows over columns [x_0..x_{nx-1}, y_0..y_{ny-1}]."""
         la, lb = X.ancestors, Y.ancestors
-        key = (X.uid, Y.uid, carry_level, tuple(eq_dims) if eq_dims is not None else None,
-               tuple(iis[l.uid] for l in la), tuple(iis[l.uid] for l in lb))
-        if key in self._cache:
-            return self._cache[key]
-
-        nx, ny = len(la), len(lb)
-        n = nx + ny
-
-        def xcol(i):  # source iv columns
-            return i
-
-        def ycol(i):
-            return nx + i
-
-        bounds = [(l.lb, l.ub - 1) for l in la] + [(l.lb, l.ub - 1) for l in lb]
-        A_eq, b_eq, A_ub, b_ub = [], [], [], []
-
-        def name_to_col_src(nm):
-            for i, l in enumerate(la):
-                if l.ivname == nm:
-                    return xcol(i)
-            raise KeyError(nm)
-
-        def name_to_col_snk(nm):
-            for i, l in enumerate(lb):
-                if l.ivname == nm:
-                    return ycol(i)
-            raise KeyError(nm)
-
-        # address equality on the requested dims
+        nx = len(la)
+        src_col = {l.ivname: i for i, l in enumerate(la)}
+        snk_col = {l.ivname: nx + i for i, l in enumerate(lb)}
+        rows = []
+        assert X.op.array == Y.op.array  # pairs come from one array's bucket
         dims = range(len(X.array.shape)) if eq_dims is None else eq_dims
-        if X.op.array == Y.op.array:
-            for d in dims:
-                ex, ey = X.op.index[d], Y.op.index[d]
-                row = np.zeros(n)
-                for nm, c in ex.coeffs.items():
-                    row[name_to_col_src(nm)] += c
-                for nm, c in ey.coeffs.items():
-                    row[name_to_col_snk(nm)] -= c
-                A_eq.append(row)
-                b_eq.append(ey.const - ex.const)
+        for d in dims:
+            ex, ey = X.op.index[d], Y.op.index[d]
+            coeffs: dict[int, int] = {}
+            for nm, c in ex.coeffs.items():
+                col = src_col[nm]
+                coeffs[col] = coeffs.get(col, 0) + c
+            for nm, c in ey.coeffs.items():
+                col = snk_col[nm]
+                coeffs[col] = coeffs.get(col, 0) - c
+            rows.append(({k: v for k, v in coeffs.items() if v}, ey.const - ex.const))
+        return rows
 
-        # happens-before
-        pfx = _common_prefix_len(la, lb)
-        if carry_level is not None:
-            assert carry_level < pfx
-            for k in range(carry_level):
-                row = np.zeros(n)
-                row[xcol(k)] = 1.0
-                row[ycol(k)] = -1.0
-                A_eq.append(row)
-                b_eq.append(0.0)
-            row = np.zeros(n)
-            row[xcol(carry_level)] = 1.0
-            row[ycol(carry_level)] = -1.0
-            A_ub.append(row)
-            b_ub.append(-1.0)  # iv_src <= iv_snk - 1
-        else:
-            # loop-independent: all common ivs equal (caller checked program order)
-            for k in range(pfx):
-                row = np.zeros(n)
-                row[xcol(k)] = 1.0
-                row[ycol(k)] = -1.0
-                A_eq.append(row)
-                b_eq.append(0.0)
-
-        # objective: min ivpart(Y) - ivpart(X)
-        c = np.zeros(n)
-        for i, l in enumerate(la):
-            c[xcol(i)] -= iis[l.uid]
-        for i, l in enumerate(lb):
-            c[ycol(i)] += iis[l.uid]
-
-        res = solve_ilp(c, np.asarray(A_ub) if A_ub else None,
-                        np.asarray(b_ub) if b_ub else None,
-                        np.asarray(A_eq) if A_eq else None,
-                        np.asarray(b_eq) if b_eq else None,
-                        bounds=bounds)
-        val = int(round(res.fun)) if res.ok else None
-        self._cache[key] = val
-        return val
-
-    # ------------------------------------------------------------------
-    def _slack(self, X: Access, Y: Access, eq_dims: Optional[list[int]],
-               iis: dict[int, int]) -> Optional[int]:
-        """min slack over all happens-before cases (None = no dependence)."""
+    def _feasible_cases(self, X: Access, Y: Access, rows: list) -> list:
+        """Happens-before cases with a non-empty feasible region (an
+        II-independent property: IIs only weight the objective)."""
+        ones = {l.uid: 1 for l in X.ancestors + Y.ancestors}
         pfx = _common_prefix_len(X.ancestors, Y.ancestors)
-        slacks = []
+        cases = []
         for lvl in range(pfx):
-            s = self._slack_case(X, Y, lvl, eq_dims, iis)
-            if s is not None:
-                slacks.append(s)
-        # loop-independent case only when X syntactically precedes Y
+            if self._case_slack(X, Y, lvl, rows, ones) is not None:
+                cases.append(lvl)
         px, py = self.pos[X.uid], self.pos[Y.uid]
         if X.uid != Y.uid and px < py:
-            s = self._slack_case(X, Y, None, eq_dims, iis)
-            if s is not None:
-                slacks.append(s)
-        if not slacks:
-            return None
-        return min(slacks)
+            if self._case_slack(X, Y, None, rows, ones) is not None:
+                cases.append(None)
+        return cases
 
-    # ------------------------------------------------------------------
-    def memory_edges(self, iis: dict[int, int]) -> list[DepEdge]:
-        edges = []
+    def _enumerate_pairs(self) -> list[_Pair]:
+        pairs = []
         by_array: dict[str, list[Access]] = {}
         for a in self.accesses:
             by_array.setdefault(a.op.array, []).append(a)
@@ -227,11 +435,7 @@ class DepAnalysis:
                         kind, delay = "WAR", 1
                     else:
                         kind, delay = "WAW", 1
-                    s = self._slack(X, Y, None, iis)
-                    if s is None:
-                        continue
-                    edges.append(DepEdge(src=X.uid, snk=Y.uid,
-                                         lower=delay - s, kind=kind, array=name))
+                    self._add_pair(pairs, X, Y, kind, delay, name, None)
             # ---- port pseudo-dependences ------------------------------
             if arr.kind == "reg":
                 continue
@@ -242,11 +446,127 @@ class DepAnalysis:
             for port, paccs in by_port.items():
                 for X in paccs:
                     for Y in paccs:
-                        s = self._slack(X, Y, part, iis)
-                        if s is None:
-                            continue
-                        edges.append(DepEdge(src=X.uid, snk=Y.uid,
-                                             lower=1 - s, kind="PORT", array=name))
+                        self._add_pair(pairs, X, Y, "PORT", 1, name, part)
+        return pairs
+
+    def _add_pair(self, pairs, X, Y, kind, delay, name, eq_dims):
+        rows = self._address_rows(X, Y, eq_dims)
+        cases = self._feasible_cases(X, Y, rows)
+        if not cases:
+            return
+        uids = tuple(dict.fromkeys(
+            [l.uid for l in X.ancestors] + [l.uid for l in Y.ancestors]))
+        pairs.append(_Pair(X=X, Y=Y, kind=kind, delay=delay, array=name,
+                           rows=rows, cases=cases, loop_uids=uids))
+
+    # ------------------------------------------------------------------
+    # per-case slack
+    # ------------------------------------------------------------------
+    def _case_slack(self, X: Access, Y: Access, carry_level: Optional[int],
+                    rows: list, iis: dict[int, int]) -> Optional[int]:
+        """Solve one memory-dependence case; None if infeasible (no dep)."""
+        la, lb = X.ancestors, Y.ancestors
+        pfx = _common_prefix_len(la, lb)
+        if self.fastpath:
+            val = _fast_slack_case(la, lb, pfx, carry_level, rows, iis)
+            if val is not _FALLBACK:
+                self.fast_cases += 1
+                if self.crosscheck:
+                    ref = self._ilp_case_slack(X, Y, carry_level, rows, iis)
+                    if val != ref:
+                        raise AssertionError(
+                            f"fast-path slack mismatch: {val} != ILP {ref} "
+                            f"({X.op} -> {Y.op}, carry={carry_level})")
+                return val
+            self.fallback_cases += 1
+        return self._ilp_case_slack(X, Y, carry_level, rows, iis)
+
+    def _ilp_case_slack(self, X: Access, Y: Access,
+                        carry_level: Optional[int], rows: list,
+                        iis: dict[int, int]) -> Optional[int]:
+        """Reference path: branch-and-bound ILP on the full case system."""
+        la, lb = X.ancestors, Y.ancestors
+        nx, ny = len(la), len(lb)
+        n = nx + ny
+        bounds = [(l.lb, l.ub - 1) for l in la] + [(l.lb, l.ub - 1) for l in lb]
+        A_eq, b_eq, A_ub, b_ub = [], [], [], []
+        for coeffs, rhs in rows:
+            row = np.zeros(n)
+            for col, c in coeffs.items():
+                row[col] = c
+            A_eq.append(row)
+            b_eq.append(float(rhs))
+
+        pfx = _common_prefix_len(la, lb)
+        if carry_level is not None:
+            assert carry_level < pfx
+            for k in range(carry_level):
+                row = np.zeros(n)
+                row[k] = 1.0
+                row[nx + k] = -1.0
+                A_eq.append(row)
+                b_eq.append(0.0)
+            row = np.zeros(n)
+            row[carry_level] = 1.0
+            row[nx + carry_level] = -1.0
+            A_ub.append(row)
+            b_ub.append(-1.0)  # iv_src <= iv_snk - 1
+        else:
+            # loop-independent: all common ivs equal (caller checked order)
+            for k in range(pfx):
+                row = np.zeros(n)
+                row[k] = 1.0
+                row[nx + k] = -1.0
+                A_eq.append(row)
+                b_eq.append(0.0)
+
+        # objective: min ivpart(Y) - ivpart(X)
+        c = np.zeros(n)
+        for i, l in enumerate(la):
+            c[i] -= iis[l.uid]
+        for i, l in enumerate(lb):
+            c[nx + i] += iis[l.uid]
+
+        res = solve_ilp(c, np.asarray(A_ub) if A_ub else None,
+                        np.asarray(b_ub) if b_ub else None,
+                        np.asarray(A_eq) if A_eq else None,
+                        np.asarray(b_eq) if b_eq else None,
+                        bounds=bounds)
+        if res.ok:
+            return int(round(res.fun))
+        if res.status != "infeasible":
+            # a truncated search must not be read as "no dependence": case
+            # feasibility is decided once at construction, so dropping the
+            # case here would delete a real dependence edge for good
+            raise RuntimeError(
+                f"dependence-case ILP unresolved ({res.status}) for "
+                f"{X.op!r} -> {Y.op!r}")
+        return None
+
+    def _pair_slack(self, pair: _Pair, iis: dict[int, int]) -> Optional[int]:
+        """min slack over the pair's feasible happens-before cases."""
+        slacks = [self._case_slack(pair.X, pair.Y, lvl, pair.rows, iis)
+                  for lvl in pair.cases]
+        slacks = [s for s in slacks if s is not None]
+        return min(slacks) if slacks else None
+
+    # ------------------------------------------------------------------
+    # edges
+    # ------------------------------------------------------------------
+    def memory_edges(self, iis: dict[int, int]) -> list[DepEdge]:
+        edges = []
+        cache = self._edge_cache
+        for idx, pair in enumerate(self._pairs):
+            key = (idx,) + tuple(iis[u] for u in pair.loop_uids)
+            edge = cache.get(key, _FALLBACK)
+            if edge is _FALLBACK:
+                s = self._pair_slack(pair, iis)
+                edge = None if s is None else DepEdge(
+                    src=pair.X.uid, snk=pair.Y.uid, lower=pair.delay - s,
+                    kind=pair.kind, array=pair.array)
+                cache[key] = edge
+            if edge is not None:
+                edges.append(edge)
         return edges
 
     # ------------------------------------------------------------------
@@ -276,3 +596,9 @@ class DepAnalysis:
                 edges.append(DepEdge(src=anc[-1].uid, snk=node.uid, lower=0,
                                      kind="STRUCT"))
         return edges
+
+    def static_edges(self) -> list[DepEdge]:
+        """SSA + structural edges: II-independent, computed once."""
+        if self._static_edges is None:
+            self._static_edges = self.ssa_edges() + self.struct_edges()
+        return self._static_edges

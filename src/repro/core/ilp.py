@@ -198,6 +198,116 @@ class ILPResult:
         return self.status == "optimal"
 
 
+def _presolve(n: int,
+              A_ub: Optional[np.ndarray], b_ub: Optional[np.ndarray],
+              A_eq: Optional[np.ndarray], b_eq: Optional[np.ndarray],
+              bounds: Sequence[tuple]) -> Optional[tuple]:
+    """ILP presolve: singleton-row elimination + interval bound tightening.
+
+    Exploits integrality (floor/ceil on derived bounds).  Returns None when
+    infeasibility is proven, else (A_ub, b_ub, A_eq, b_eq, bounds) with rows
+    dropped/simplified and bounds tightened.  Fixed variables (lo == hi) are
+    substituted out of the rows but kept as columns so indices are stable.
+    """
+    los = [float(b[0]) for b in bounds]
+    his = [math.inf if b[1] is None else float(b[1]) for b in bounds]
+    eq = ([] if A_eq is None or not len(A_eq) else
+          [(np.array(A_eq[i], dtype=np.float64), float(b_eq[i]))
+           for i in range(len(A_eq))])
+    ub = ([] if A_ub is None or not len(A_ub) else
+          [(np.array(A_ub[i], dtype=np.float64), float(b_ub[i]))
+           for i in range(len(A_ub))])
+
+    for _ in range(12):  # tightening passes (fixpoint or cap)
+        changed = False
+        for rows, is_eq in ((eq, True), (ub, False)):
+            kept = []
+            for row, rhs in rows:
+                nz = np.flatnonzero(np.abs(row) > TOL)
+                # substitute fixed variables into the rhs
+                fixed = [j for j in nz if his[j] - los[j] < TOL]
+                if fixed:
+                    for j in fixed:
+                        rhs -= row[j] * los[j]
+                        row[j] = 0.0
+                    nz = np.flatnonzero(np.abs(row) > TOL)
+                    changed = True
+                if nz.size == 0:
+                    if (abs(rhs) > 1e-6) if is_eq else (rhs < -1e-6):
+                        return None
+                    continue  # trivially satisfied row
+                if nz.size == 1:
+                    j = int(nz[0])
+                    a = row[j]
+                    if is_eq:
+                        v = rhs / a
+                        if abs(v - round(v)) > 1e-6:
+                            return None
+                        v = round(v)
+                        if v < los[j] - TOL or v > his[j] + TOL:
+                            return None
+                        los[j] = his[j] = v
+                    elif a > 0:
+                        his[j] = min(his[j], math.floor(rhs / a + 1e-9))
+                    else:
+                        los[j] = max(los[j], math.ceil(rhs / a - 1e-9))
+                    changed = True
+                    continue  # row absorbed into the bounds
+                # interval-arithmetic tightening of each variable in the row
+                act_lo = act_hi = 0.0
+                for j in nz:
+                    a = row[j]
+                    if a > 0:
+                        act_lo += a * los[j]
+                        act_hi += a * his[j]
+                    else:
+                        act_lo += a * his[j]
+                        act_hi += a * los[j]
+                if act_lo > rhs + 1e-6 or (is_eq and act_hi < rhs - 1e-6):
+                    return None
+                for j in nz:
+                    a = row[j]
+                    # residual activity of the other terms
+                    o_lo = act_lo - (a * los[j] if a > 0 else a * his[j])
+                    o_hi = act_hi - (a * his[j] if a > 0 else a * los[j])
+                    if not math.isfinite(o_lo):
+                        continue
+                    if a > 0:
+                        new_hi = math.floor((rhs - o_lo) / a + 1e-9)
+                        if new_hi < his[j]:
+                            his[j] = new_hi
+                            changed = True
+                        if is_eq and math.isfinite(o_hi):
+                            new_lo = math.ceil((rhs - o_hi) / a - 1e-9)
+                            if new_lo > los[j]:
+                                los[j] = new_lo
+                                changed = True
+                    else:
+                        new_lo = math.ceil((rhs - o_lo) / a - 1e-9)
+                        if new_lo > los[j]:
+                            los[j] = new_lo
+                            changed = True
+                        if is_eq and math.isfinite(o_hi):
+                            new_hi = math.floor((rhs - o_hi) / a + 1e-9)
+                            if new_hi < his[j]:
+                                his[j] = new_hi
+                                changed = True
+                kept.append((row, rhs))
+            rows[:] = kept
+        if any(los[j] > his[j] + TOL for j in range(n)):
+            return None
+        if not changed:
+            break
+
+    A_eq2 = np.asarray([r for r, _ in eq]) if eq else None
+    b_eq2 = np.asarray([b for _, b in eq]) if eq else None
+    A_ub2 = np.asarray([r for r, _ in ub]) if ub else None
+    b_ub2 = np.asarray([b for _, b in ub]) if ub else None
+    bounds2 = [(int(los[j]), None if math.isinf(his[j]) else int(his[j]))
+               for j in range(n)]
+    return A_ub2, b_ub2, A_eq2, b_eq2, bounds2
+
+
 def solve_ilp(c: Sequence[float],
               A_ub: Optional[np.ndarray] = None,
               b_ub: Optional[np.ndarray] = None,
@@ -207,24 +317,37 @@ def solve_ilp(c: Sequence[float],
               max_nodes: int = 4000) -> ILPResult:
     """Minimize c@x over integer x with optional per-variable (lo, hi) bounds.
 
-    Branch-and-bound over the LP relaxation.  Variables default to x >= 0; pass
+    Presolve (singleton rows, bound tightening) then branch-and-bound over
+    the LP relaxation, exiting early when the root LP is already integral or
+    an incumbent matches the root bound.  Variables default to x >= 0; pass
     ``bounds`` to shift/cap them (bounds may be negative; we shift internally).
     """
     c = np.asarray(c, dtype=np.float64)
     n = c.shape[0]
     if bounds is None:
         bounds = [(0, None)] * n
-    los = np.array([b[0] for b in bounds], dtype=np.float64)
-    # shift x = y + lo  =>  y >= 0
-    A_ub_l = [] if A_ub is None else [np.asarray(A_ub, np.float64).reshape(-1, n)]
-    b_ub_l = [] if b_ub is None else [np.asarray(b_ub, np.float64).ravel()]
-    if A_ub_l:
-        b_ub_l = [b_ub_l[0] - A_ub_l[0] @ los]
-    A_eq_s = None
-    b_eq_s = None
+    if A_ub is not None and len(A_ub):
+        A_ub = np.asarray(A_ub, np.float64).reshape(-1, n)
     if A_eq is not None and len(A_eq):
-        A_eq_s = np.asarray(A_eq, np.float64).reshape(-1, n)
-        b_eq_s = np.asarray(b_eq, np.float64).ravel() - A_eq_s @ los
+        A_eq = np.asarray(A_eq, np.float64).reshape(-1, n)
+    pre = _presolve(n, A_ub, b_ub, A_eq, b_eq, bounds)
+    if pre is None:
+        return ILPResult("infeasible", None, None)
+    A_ub, b_ub, A_eq, b_eq, bounds = pre
+    if all(hi is not None and lo == hi for lo, hi in bounds):
+        # presolve fixed every variable; verify any rows it left behind
+        x = np.asarray([lo for lo, _ in bounds], dtype=np.int64)
+        if A_ub is not None and np.any(A_ub @ x > np.asarray(b_ub) + 1e-6):
+            return ILPResult("infeasible", None, None)
+        if A_eq is not None and np.any(np.abs(A_eq @ x - np.asarray(b_eq)) > 1e-6):
+            return ILPResult("infeasible", None, None)
+        return ILPResult("optimal", x, float(c @ x))
+    los = np.array([b[0] for b in bounds], dtype=np.float64)
+    # shift x = y + lo  =>  y >= 0  (presolve already normalized the arrays)
+    A_ub_l = [] if A_ub is None else [A_ub]
+    b_ub_l = [] if A_ub is None else [np.asarray(b_ub, np.float64) - A_ub @ los]
+    A_eq_s = A_eq
+    b_eq_s = None if A_eq is None else np.asarray(b_eq, np.float64) - A_eq @ los
     # upper bounds become rows
     ub_rows = []
     ub_rhs = []
@@ -246,11 +369,13 @@ def solve_ilp(c: Sequence[float],
 
     stack = [(A0, b0)]
     nodes = 0
-    status_seen_feasible = False
+    root_bound: Optional[float] = None
     while stack and nodes < max_nodes:
         nodes += 1
         A_cur, b_cur = stack.pop()
         res = solve_lp(c, A_cur, b_cur, A_eq_s, b_eq_s)
+        if nodes == 1 and res.ok:
+            root_bound = res.fun  # LP relaxation bound: proves optimality early
         if res.status == "unbounded":
             return ILPResult("unbounded", None, None)
         if not res.ok:
@@ -268,10 +393,11 @@ def solve_ilp(c: Sequence[float],
         if frac_idx < 0:
             xi = np.round(x).astype(np.int64)
             val = float(c @ xi)
-            status_seen_feasible = True
             if val < best_val:
                 best_val = val
                 best_x = xi
+                if root_bound is not None and best_val <= root_bound + 1e-6:
+                    break  # incumbent meets the root LP bound: optimal
             continue
         lo_branch = math.floor(x[frac_idx])
         # x[frac] <= floor
@@ -287,7 +413,9 @@ def solve_ilp(c: Sequence[float],
         stack.append((A2, b2))
 
     if best_x is None:
-        return ILPResult("infeasible" if not status_seen_feasible else "iteration_limit",
+        # only a fully-explored tree proves infeasibility; hitting the node
+        # cap with branches left is a truncated search, not a verdict
+        return ILPResult("infeasible" if not stack else "iteration_limit",
                          None, None)
     return ILPResult("optimal", best_x + los.astype(np.int64), best_val + const_shift)
 

@@ -45,6 +45,20 @@ class PipelineSchedule:
         return self.bwd_start[s] + m * self.ii
 
 
+def _peak_live(intervals) -> int:
+    """Max overlap of live [born, dies] activation intervals (dies inclusive),
+    by event-sweep: +1 at birth, -1 just after death."""
+    events = []
+    for born, dies in intervals:
+        events.append((born, 1))
+        events.append((dies + 1, -1))
+    live = peak = 0
+    for _, d in sorted(events):
+        live += d
+        peak = max(peak, live)
+    return peak
+
+
 def _build_program(S: int, M: int, t_f: int, t_b: int, backward: bool,
                    cross_from=None):
     """One loop over microbatches; the body is the topologically-ordered
@@ -113,22 +127,19 @@ def synthesize(S: int, M: int, *, t_f: int = 1, t_b: int = 2,
         bwd_start = [divs[i * t_b] for i in range(S)]
         bwd_start.reverse()  # emitted S-1..0, report as 0..S-1
 
-    # peak live ACT values (activation-memory pressure, the 1F1B metric)
-    events = []
+    # peak live ACT values (activation-memory pressure, the 1F1B metric):
+    # ACT[s][m] is born at stage s's fwd and dies at its own bwd (stashed
+    # activation), or at the next stage's fwd when there is no backward.
+    intervals = []
     for s in range(S):
         for m in range(M):
-            born = fwd_start[s] + m * sched.iis[loops[0].uid] if False else \
-                fwd_start[s] + m * ii
+            born = fwd_start[s] + m * ii
             if backward:
                 dies = bwd_start[s] + m * ii
             else:
                 dies = (fwd_start[s + 1] + m * ii) if s + 1 < S else born + 1
-            events.append((born, 1))
-            events.append((dies + 1, -1))
-    live = peak = 0
-    for _, d in sorted(events):
-        live += d
-        peak = max(peak, live)
+            intervals.append((born, dies))
+    peak = _peak_live(intervals)
 
     return PipelineSchedule(
         n_stages=S, n_microbatches=M, fwd_start=fwd_start,
@@ -182,15 +193,8 @@ def synthesize_interleaved(S: int, V: int, M: int, *, t_f: int = 1,
             if isinstance(op, ArithOp) and op.fn == "div"]
     fwd_start = [muls[c * t_f] for c in range(C)]
     bwd_start = list(reversed([divs[i * t_b] for i in range(C)]))
-    events = []
-    for c in range(C):
-        for m_ in range(M):
-            events.append((fwd_start[c] + m_ * ii, 1))
-            events.append((bwd_start[c] + m_ * ii + 1, -1))
-    live = peak = 0
-    for _, d in sorted(events):
-        live += d
-        peak = max(peak, live)
+    peak = _peak_live((fwd_start[c] + m_ * ii, bwd_start[c] + m_ * ii)
+                      for c in range(C) for m_ in range(M))
     return PipelineSchedule(
         n_stages=C, n_microbatches=M, fwd_start=fwd_start,
         bwd_start=bwd_start, ii=ii, latency=sched.completion_time(),

@@ -19,6 +19,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Optional
 
+import numpy as np
+
 from .deps import DepAnalysis, DepEdge
 from .ir import ArithOp, ConstOp, LoadOp, Loop, Program, StoreOp
 
@@ -124,20 +126,33 @@ def check_loop_occupancy(p: Program, iis: dict[int, int]) -> bool:
 
 
 def longest_path(nodes, edges: list[DepEdge]) -> Optional[dict[int, int]]:
-    """Earliest schedule via integer Bellman-Ford; None if positive cycle."""
-    theta = {n.uid: 0 for n in nodes}
-    ids = list(theta)
-    # group for speed
-    es = [(e.src, e.snk, e.lower) for e in edges if e.lower > -10**9]
-    for it in range(len(ids) + 1):
-        changed = False
-        for src, snk, lo in es:
-            cand = theta[src] + lo
-            if cand > theta[snk]:
-                theta[snk] = cand
-                changed = True
-        if not changed:
-            return theta
+    """Earliest schedule via integer Bellman-Ford; None if positive cycle.
+
+    Vectorized: edges become (src, snk, lower) numpy columns sorted by sink;
+    each relaxation pass is one gather + segmented max (``reduceat``) instead
+    of a Python loop over edges.  Synchronous relaxation reaches the least
+    fixpoint in <= |V| passes (optimal walks are simple when no positive
+    cycle exists); still changing after that means a positive cycle.
+    """
+    ids = [n.uid for n in nodes]
+    nv = len(ids)
+    idx = {u: i for i, u in enumerate(ids)}
+    es = [(idx[e.src], idx[e.snk], e.lower) for e in edges
+          if e.lower > -10**9]
+    if not es:
+        return dict.fromkeys(ids, 0)
+    arr = np.asarray(es, dtype=np.int64)
+    order = np.argsort(arr[:, 1], kind="stable")
+    src, snk, low = arr[order, 0], arr[order, 1], arr[order, 2]
+    starts = np.flatnonzero(np.r_[True, snk[1:] != snk[:-1]])
+    targets = snk[starts]
+    theta = np.zeros(nv, dtype=np.int64)
+    for _ in range(nv + 1):
+        best = np.maximum.reduceat(theta[src] + low, starts)
+        cur = theta[targets]
+        if np.all(best <= cur):
+            return dict(zip(ids, theta.tolist()))
+        theta[targets] = np.maximum(cur, best)
     return None  # positive cycle -> infeasible
 
 
@@ -184,14 +199,18 @@ def _minimize_delays(p: Program, theta: dict[int, int], edges: list[DepEdge],
 
 
 def build_edges(dep: DepAnalysis, iis: dict[int, int]) -> list[DepEdge]:
-    return dep.memory_edges(iis) + dep.ssa_edges() + dep.struct_edges()
+    """Memory edges are cached per conflicting pair on the IIs of the loops
+    in that pair's iteration vectors, so a probe that moves one loop's II
+    only recomputes the edges touching that loop; SSA/structural edges are
+    II-independent and built once per DepAnalysis."""
+    return dep.memory_edges(iis) + dep.static_edges()
 
 
 def schedule(p: Program, iis: dict[int, int],
              dep: Optional[DepAnalysis] = None,
              minimize_registers: bool = True) -> Schedule:
     dep = dep or DepAnalysis(p)
-    nodes = _all_nodes(p)
+    nodes = dep.all_nodes()
     if not check_loop_occupancy(p, iis):
         return Schedule(p, iis, {n.uid: 0 for n in nodes}, [], feasible=False)
     edges = build_edges(dep, iis)
@@ -207,7 +226,7 @@ def feasible(p: Program, iis: dict[int, int], dep: DepAnalysis) -> bool:
     if not check_loop_occupancy(p, iis):
         return False
     edges = build_edges(dep, iis)
-    return longest_path(_all_nodes(p), edges) is not None
+    return longest_path(dep.all_nodes(), edges) is not None
 
 
 # ---------------------------------------------------------------------------

@@ -14,7 +14,10 @@ SMOKE_SHAPE = ShapeConfig("smoke_train", "train", 32, 2)
 SMOKE_DECODE = ShapeConfig("smoke_decode", "decode", 32, 2)
 
 
-@pytest.fixture(scope="module", params=ARCH_IDS)
+@pytest.fixture(scope="module", params=[
+    pytest.param(a, marks=pytest.mark.slow)
+    if a == "jamba_1_5_large_398b" else a
+    for a in ARCH_IDS])
 def arch(request):
     cfg = get_config(request.param, reduced=True)
     cfg = dataclasses.replace(cfg, dtype="float32")  # CPU-precision smoke
@@ -63,6 +66,7 @@ def test_decode_step(arch):
     assert jax.tree.structure(new_cache) == jax.tree.structure(cache)
 
 
+@pytest.mark.slow
 def test_decode_matches_prefill_last_token():
     """Decode-with-cache must agree with a full forward (teacher forcing) for
     an architecture of each mixer family that supports exact comparison."""

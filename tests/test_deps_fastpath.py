@@ -1,0 +1,115 @@
+"""Differential tests: closed-form affine slack fast path ≡ branch-and-bound ILP.
+
+``DepAnalysis(p, crosscheck=True)`` re-solves EVERY case the fast path takes
+with the reference ILP and raises on any mismatch, so driving a full
+autotune+schedule under crosscheck exercises the equivalence across all the
+II assignments the binary search probes.  We additionally check that the
+fast and ILP analyses agree on which pairs/cases are feasible at all (an
+II-independent property the fast path must also get right).
+"""
+import numpy as np
+import pytest
+
+from repro.core.autotune import autotune
+from repro.core.deps import DepAnalysis
+from repro.core.programs import (BENCHMARKS, fig1_conv_chain, fig3_conv1d)
+from repro.core.scheduler import schedule
+
+
+def _differential(p, require_no_fallback=False):
+    # crosscheck=True re-solves EVERY fast-path case with the ILP and raises
+    # on mismatch — including the None (case-infeasible) decisions made
+    # during pair enumeration, so feasibility agreement is covered too.
+    dep = DepAnalysis(p, crosscheck=True)
+    iis = autotune(p, dep)
+    s = schedule(p, iis, dep)
+    assert s.feasible
+    assert dep.fast_cases > 0
+    if require_no_fallback:
+        assert dep.fallback_cases == 0, \
+            "corpus dependence ILPs must all be closed-form solvable"
+    return dep
+
+
+def _corpus(n):
+    progs = [("fig3", fig3_conv1d()), ("fig1", fig1_conv_chain(n=n))]
+    for name, mk in BENCHMARKS.items():
+        for storage in ("reg", "bram"):
+            arg = max(4, n // 2) if name == "two_mm" else n
+            progs.append((f"{name}[{arg},{storage}]", mk(arg, storage)))
+    return progs
+
+
+@pytest.mark.parametrize("name,p", _corpus(6), ids=lambda v: v if isinstance(v, str) else "")
+def test_corpus_fastpath_matches_ilp(name, p):
+    _differential(p, require_no_fallback=True)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name,p", _corpus(32), ids=lambda v: v if isinstance(v, str) else "")
+def test_corpus_fastpath_matches_ilp_fullsize(name, p):
+    _differential(p, require_no_fallback=True)
+
+
+# ---------------------------------------------------------------------------
+# randomized affine programs: strides, diagonals, constants, carried deps
+# ---------------------------------------------------------------------------
+
+
+def _random_affine_program(seed: int):
+    from repro.core.ir import ProgramBuilder
+
+    rng = np.random.default_rng(2000 + seed)
+    b = ProgramBuilder(f"aff{seed}")
+    size = int(rng.integers(3, 6))
+    n_arrays = int(rng.integers(2, 4))
+    names = []
+    for a in range(n_arrays):
+        full = bool(rng.integers(0, 2))
+        b.array(f"A{a}", (2 * size + 3, 2 * size + 3),
+                partition=(0, 1) if full else (0,),
+                ports=("w", "r") if full else ("w", "r", "r"))
+        names.append(f"A{a}")
+
+    def rnd_index(ivs):
+        """Random affine expr over the loop ivs: strided, diagonal, shifted,
+        or constant — the index shapes the closed form must cover."""
+        kind = int(rng.integers(0, 5))
+        if kind == 0:            # plain shifted iv
+            return ivs[int(rng.integers(0, len(ivs)))] + int(rng.integers(0, 3))
+        if kind == 1:            # strided (the DUS decimation pattern)
+            return ivs[int(rng.integers(0, len(ivs)))] * 2 + int(rng.integers(0, 2))
+        if kind == 2 and len(ivs) > 1:   # diagonal coupling
+            return ivs[0] + ivs[1]
+        if kind == 3:            # constant address
+            return int(rng.integers(0, size))
+        return ivs[int(rng.integers(0, len(ivs)))]
+
+    n_nests = int(rng.integers(2, 4))
+    for t in range(n_nests):
+        src = names[int(rng.integers(0, len(names)))]
+        dst = names[int(rng.integers(0, len(names)))]
+        depth = int(rng.integers(1, 4))
+        ivnames = [f"t{t}l{d}" for d in range(depth)]
+
+        def body(ivs):
+            x = b.load(src, rnd_index(ivs), rnd_index(ivs))
+            y = b.load(src, rnd_index(ivs), rnd_index(ivs))
+            v = b.arith(["add", "mul", "sub"][int(rng.integers(0, 3))], x, y)
+            b.store(dst, v, rnd_index(ivs), rnd_index(ivs))
+
+        def nest(d, ivs):
+            if d == depth:
+                body(ivs)
+                return
+            with b.loop(ivnames[d], 0, size) as iv_:
+                nest(d + 1, ivs + [iv_])
+
+        nest(0, [])
+    return b.build()
+
+
+@pytest.mark.parametrize("seed", range(50))
+def test_random_affine_fastpath_matches_ilp(seed):
+    p = _random_affine_program(seed)
+    _differential(p)

@@ -4,11 +4,13 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.config import get_config
 from repro.models import lm
 
 
+@pytest.mark.slow
 def test_whisper_decode_matches_teacher_forcing():
     cfg = dataclasses.replace(get_config("whisper_small", reduced=True),
                               dtype="float32")

@@ -1,0 +1,52 @@
+"""Schedule-equality regression: the fast-path/incremental compilation must
+produce EXACTLY the schedules the original per-pair-ILP implementation did.
+
+The expected values below were captured by running the pre-optimization
+(seed) implementation; any drift means the rewrite changed a computed
+schedule, which the perf work must never do.
+"""
+from repro.core import compile_program, pipeline_ilp as pp
+from repro.core.programs import fig3_conv1d, unsharp
+
+
+# Captured from the seed implementation (per-pair branch-and-bound ILPs).
+SEED_PP = {
+    (4, 8): dict(ii=3, latency=43, fwd_start=[0, 2, 4, 6],
+                 bwd_start=[19, 16, 13, 10], peak=18),
+    (8, 16): dict(ii=3, latency=87,
+                  fwd_start=[0, 2, 4, 6, 8, 10, 12, 14],
+                  bwd_start=[39, 36, 33, 30, 27, 24, 21, 18], peak=63),
+}
+
+SEED_FIG3 = dict(iis={"i": 14, "j": 7}, theta=[0, 0, 4, 0, 0, 1, 5, 10])
+
+SEED_UNSHARP8 = dict(
+    iis={"bxi": 8, "bxj": 1, "byi": 8, "byj": 1,
+         "shi": 8, "shj": 1, "mki": 8, "mkj": 1},
+    theta=[0, 0, 0, 1, 1, 0, 1, 1, 0, 1, 1, 5, 10, 15, 0, 0, 18, 19, 19,
+           25, 26, 26, 32, 33, 33, 30, 37, 42, 0, 0, 10, 43, 11, 11, 44,
+           44, 48, 53, 0, 0, 54, 54, 55, 60, 60, 64, 69])
+
+
+def test_pipeline_schedules_unchanged():
+    for (S, M), want in SEED_PP.items():
+        s = pp.synthesize(S, M, t_f=1, t_b=2)
+        assert s.ii == want["ii"], (S, M)
+        assert s.latency == want["latency"], (S, M)
+        assert s.fwd_start == want["fwd_start"], (S, M)
+        assert s.bwd_start == want["bwd_start"], (S, M)
+        assert s.peak_live_activations == want["peak"], (S, M)
+
+
+def test_fig3_schedule_unchanged():
+    p = fig3_conv1d()
+    s = compile_program(p)
+    assert {l.ivname: s.iis[l.uid] for l in p.loops()} == SEED_FIG3["iis"]
+    assert [s.theta[n.uid] for n, _ in p.walk()] == SEED_FIG3["theta"]
+
+
+def test_unsharp_stencil_schedule_unchanged():
+    p = unsharp(8)
+    s = compile_program(p)
+    assert {l.ivname: s.iis[l.uid] for l in p.loops()} == SEED_UNSHARP8["iis"]
+    assert [s.theta[n.uid] for n, _ in p.walk()] == SEED_UNSHARP8["theta"]

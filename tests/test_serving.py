@@ -48,6 +48,7 @@ def _serve_single(cfg, params, prompt, max_new, Smax):
     return out
 
 
+@pytest.mark.slow
 def test_continuous_batching_matches_single(served_model):
     cfg, params, decode, init_cache, Smax = served_model
     rng = np.random.default_rng(0)
