@@ -38,6 +38,15 @@ def main() -> None:
               f"[{storage}] (paper band: 2-2.9x) ===")
         _emit([(f"fig10.{storage}.{n}", us, d) for n, us, d in paper.fig10(res)])
 
+    if only in (None, "dse"):
+        print("# === pass-pipeline DSE — transformed program vs untransformed "
+              "compile_program under the iso-resource budget (DESIGN.md §6) ===")
+        # always re-run: this section IS the verification sweep, a cached
+        # replay would hide transform/DSE regressions (the JSON still caches
+        # for read-only consumers like dse_table)
+        res = paper.compute_dse(storage="bram", force=True)
+        _emit([(f"dse.bram.{n}", us, d) for n, us, d in paper.dse_table(res)])
+
     if only in (None, "pipeline"):
         try:
             from benchmarks import pipeline_ilp_bench

@@ -7,12 +7,20 @@ from .ir import (AffExpr, ArrayDecl, ArithOp, ConstOp, LoadOp, Loop, Program,
 from .ilp import solve_ilp, solve_lp, brute_force_ilp
 from .deps import DepAnalysis, DepEdge
 from .scheduler import Schedule, schedule, feasible, emit_hir
-from .autotune import autotune, compile_program
+from .transforms import (ArrayPartition, FuseProducerConsumer, LoopTile,
+                         LoopUnroll, Normalize, Pass, PassManager,
+                         PassVerificationError, ToSPSC, TRANSFORMS,
+                         differential_check, to_spsc)
+from .autotune import (DSECandidate, DSEResult, autotune, compile_program,
+                       explore)
 
 __all__ = [
     "AffExpr", "ArrayDecl", "ArithOp", "ConstOp", "LoadOp", "Loop", "Program",
     "ProgramBuilder", "StoreOp", "aff", "iv", "normalize",
     "solve_ilp", "solve_lp", "brute_force_ilp",
     "DepAnalysis", "DepEdge", "Schedule", "schedule", "feasible", "emit_hir",
-    "autotune", "compile_program",
+    "Pass", "PassManager", "PassVerificationError", "TRANSFORMS",
+    "Normalize", "LoopUnroll", "LoopTile", "ArrayPartition",
+    "FuseProducerConsumer", "ToSPSC", "to_spsc", "differential_check",
+    "autotune", "compile_program", "explore", "DSECandidate", "DSEResult",
 ]

@@ -1,5 +1,7 @@
-"""The paper's auto-tuner (§3.1): binary search for the smallest feasible II
-of every loop that lacks a programmer-specified ``pipeline`` II.
+"""The paper's auto-tuner (§3.1) + the resource-aware DSE driver.
+
+Auto-tuner: binary search for the smallest feasible II of every loop that
+lacks a programmer-specified ``pipeline`` II.
 
 Feasibility of an II assignment = the scheduling system admits a solution
 (Bellman-Ford finds no positive cycle) and loop-counter occupancy holds.
@@ -8,14 +10,25 @@ DepAnalysis enumerated the conflicting pairs once and caches each pair's
 edge on the IIs of the loops in its iteration vectors, so a probe that
 moves one loop's II only re-solves the dependences touching that loop —
 and those via the closed-form fast path, not branch-and-bound.
+
+DSE (``explore``, DESIGN.md §6): the scheduler finds the best schedule for
+a *fixed* program, but the paper's headline wins depend on program shape.
+``explore(p, budget)`` searches semantics-preserving transform pipelines
+(fuse / partition / unroll / tile from ``transforms``), compiles every
+candidate through the incremental scheduler, and returns the minimum-latency
+schedule whose ``resources()`` stay under the budget — turning the repo from
+"schedule one program" into "compile a workload".
 """
 from __future__ import annotations
 
-from typing import Optional
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
 
 from .deps import DepAnalysis
 from .ir import Loop, Program
 from .scheduler import Schedule, check_loop_occupancy, feasible, schedule
+from .transforms import (ArrayPartition, FuseProducerConsumer, LoopTile,
+                         LoopUnroll, Pass, PassManager)
 
 
 def _loops_with_depth(p: Program) -> list[tuple[Loop, int]]:
@@ -97,3 +110,209 @@ def compile_program(p: Program, verbose: bool = False) -> Schedule:
     s = schedule(p, iis, dep)
     assert s.feasible
     return s
+
+
+# ---------------------------------------------------------------------------
+# Resource-aware design-space exploration (DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class DSECandidate:
+    """One explored point: a transform pipeline + its compiled schedule."""
+
+    desc: str                     # human-readable pipeline description
+    passes: tuple[Pass, ...]
+    program: Program
+    schedule: Schedule
+    latency: int
+    res: dict[str, float]         # resources(program, schedule, "ours")
+    within_budget: bool
+
+
+@dataclass
+class DSEResult:
+    baseline: DSECandidate
+    best: DSECandidate
+    candidates: list[DSECandidate] = field(default_factory=list)
+    budget: dict[str, float] = field(default_factory=dict)
+
+    @property
+    def speedup(self) -> float:
+        return self.baseline.latency / self.best.latency
+
+    def table(self) -> list[tuple[str, int, float, float, bool]]:
+        """(desc, latency, bram_bytes, dsp, within_budget) rows, best first."""
+        rows = [(c.desc, c.latency, c.res["bram_bytes"], c.res["dsp"],
+                 c.within_budget) for c in self.candidates]
+        rows.sort(key=lambda r: (not r[4], r[1], r[2], r[3]))
+        return rows
+
+
+def _budget_key(res: dict[str, float], budget: dict[str, float]) -> bool:
+    return all(res.get(k, 0.0) <= v + 1e-9 for k, v in budget.items())
+
+
+def _unroll_factors_for(p: Program, factors: Sequence[int]) -> list[int]:
+    """Factors that partially unroll at least one innermost loop."""
+    out = []
+    inner = [l for l in p.loops()
+             if not any(isinstance(ch, Loop) for ch in l.body)]
+    for f in factors:
+        if any(l.trip % f == 0 and l.trip // f >= 1 and not l.unroll
+               for l in inner):
+            out.append(f)
+    return out
+
+
+def _tile_moves(p: Program, sizes: Sequence[int]) -> list[LoopTile]:
+    """One tiling move per size, strip-mining every top-level loop it
+    divides (order-preserving, so always legal)."""
+    moves = []
+    tops = [it for it in p.body if isinstance(it, Loop)]
+    for s in sizes:
+        cfg = {l.ivname: s for l in tops if l.trip % s == 0 and l.trip // s >= 2}
+        if cfg:
+            moves.append(LoopTile(cfg))
+    return moves
+
+
+def explore(p: Program, budget: Optional[dict[str, float]] = None, *,
+            unroll_factors: Sequence[int] = (2, 4),
+            tile_sizes: Sequence[int] = (4,),
+            max_candidates: int = 24,
+            verify: bool = True,
+            validate: bool = False,
+            seeds: Sequence[int] = (0,),
+            verbose: bool = False) -> DSEResult:
+    """Resource-aware DSE over transform pipelines.
+
+    ``budget`` maps resource names (keys of ``dataflow.resources``:
+    ``bram_bytes`` / ``dsp`` / ``ff_bits`` / ``lut``) to ceilings; missing
+    keys are unconstrained (unknown keys raise).  ``budget=None`` means
+    *iso-resource*: the baseline program's own BRAM and DSP become the
+    ceiling, so any winner is faster at equal-or-lower memory/datapath
+    cost.  If NO candidate (baseline included) fits the budget, the overall
+    min-latency candidate is returned with ``within_budget=False`` — check
+    the flag when passing a tight explicit budget.
+
+    Every candidate pipeline is verified by differential execution
+    (``verify=True``, PassManager contract) before it is compiled; with
+    ``validate=True`` the winner's schedule additionally passes the
+    brute-force ``validate_schedule``/``timed_exec`` oracles (small
+    programs only — it enumerates dynamic instances).
+
+    Search: every single move, then greedy composition on top of the best
+    within-budget candidate, bounded by ``max_candidates`` compilations.
+    """
+    from .dataflow import resources
+
+    def measure(desc: str, passes: Sequence[Pass],
+                base: Optional[Program] = None,
+                base_passes: Sequence[Pass] = ()) -> Optional[DSECandidate]:
+        """Apply ``passes`` on top of ``base`` (an already-verified
+        intermediate, default the original program) so greedy composition
+        does not re-apply and re-verify the whole frontier prefix —
+        equivalence to ``p`` is transitive through the verified base."""
+        start = base if base is not None else p
+        pm = PassManager(passes, verify=verify, seeds=seeds)
+        q = pm.run(start)
+        if passes and (q is start or not pm.reports[-1].changed):
+            # the pipeline (or its newest move) applied nothing: the result
+            # is identical to an already-measured candidate — don't compile
+            # it again or record a duplicate under a longer desc
+            return None
+        s = compile_program(q)
+        res = resources(q, s, "ours")
+        return DSECandidate(
+            desc=desc or "baseline", passes=tuple(base_passes) + tuple(passes),
+            program=q, schedule=s, latency=s.completion_time(), res=res,
+            within_budget=True)
+
+    baseline = measure("baseline", [])
+    if budget is None:
+        budget = {"bram_bytes": baseline.res["bram_bytes"],
+                  "dsp": baseline.res["dsp"]}
+    budget = dict(budget)
+    unknown = set(budget) - set(baseline.res)
+    if unknown:
+        raise ValueError(
+            f"unknown budget resource(s) {sorted(unknown)}; "
+            f"valid keys: {sorted(baseline.res)}")
+    baseline.within_budget = _budget_key(baseline.res, budget)
+
+    moves: list[tuple[str, Pass]] = [
+        ("fuse", FuseProducerConsumer()),
+        ("partition", ArrayPartition()),
+    ]
+    moves += [(f"unroll(x{f})", LoopUnroll(f))
+              for f in _unroll_factors_for(p, unroll_factors)]
+    moves += [(t.name, t) for t in _tile_moves(p, tile_sizes)]
+
+    candidates: list[DSECandidate] = [baseline]
+    seen_descs = {"baseline"}
+    compiles = 1
+
+    def try_pipeline(descs: list[str], passes: list[Pass],
+                     base: Optional[Program] = None,
+                     base_passes: Sequence[Pass] = ()) -> Optional[DSECandidate]:
+        nonlocal compiles
+        desc = " | ".join(descs)
+        if desc in seen_descs or compiles >= max_candidates:
+            return None
+        seen_descs.add(desc)
+        c = measure(desc, passes, base=base, base_passes=base_passes)
+        if c is not None:
+            compiles += 1  # only actual compilations count against the cap
+            c.within_budget = _budget_key(c.res, budget)
+            candidates.append(c)
+            if verbose:
+                print(f"  dse: {desc}: latency={c.latency} res={c.res} "
+                      f"{'OK' if c.within_budget else 'OVER-BUDGET'}")
+        return c
+
+    # level 1: every single move
+    for desc, mv in moves:
+        try_pipeline([desc], [mv])
+
+    # greedy composition: extend the best within-budget pipeline so far
+    def best_of(cands):
+        ok = [c for c in cands if c.within_budget]
+        pool = ok or cands
+        return min(pool, key=lambda c: (c.latency, c.res["bram_bytes"],
+                                        c.res["dsp"], c.res["ff_bits"]))
+
+    frontier = best_of(candidates)
+    while compiles < max_candidates:
+        base_descs = frontier.desc.split(" | ") if frontier.passes else []
+        for desc, mv in moves:
+            if desc not in base_descs:
+                try_pipeline(base_descs + [desc], [mv],
+                             base=frontier.program,
+                             base_passes=frontier.passes)
+        nxt = best_of(candidates)
+        if nxt is frontier:
+            break
+        frontier = nxt
+
+    best = best_of(candidates)
+    if validate:
+        # explicit raises (not bare asserts): these oracles must survive -O
+        from .sim import (make_inputs, sequential_exec, timed_exec,
+                          validate_schedule)
+        violations = validate_schedule(best.program, best.schedule)
+        if violations:
+            raise AssertionError(
+                f"DSE winner '{best.desc}' fails validate_schedule: "
+                f"{violations[:5]}")
+        import numpy as np
+        inp = make_inputs(best.program, seeds[0])
+        got = timed_exec(best.program, best.schedule, inp)
+        want = sequential_exec(best.program, inp)
+        for k in want:
+            if not np.allclose(got[k], want[k], rtol=1e-12, atol=0):
+                raise AssertionError(
+                    f"DSE winner '{best.desc}': timed_exec differs from "
+                    f"sequential_exec on array {k}")
+    return DSEResult(baseline=baseline, best=best, candidates=candidates,
+                     budget=budget)

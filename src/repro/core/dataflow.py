@@ -11,8 +11,9 @@ We reproduce those semantics with (a) a static read/write-order analysis and
 using the same per-loop IIs as our scheduler (fair: identical inner-loop
 hardware, only the inter-nest mechanism differs).
 
-``to_spsc`` performs the paper's benchmark transformation: inserting copy
-loops so multi-consumer arrays become chains of SPSC channels (§5.2).
+The paper's §5.2 benchmark transformation (``to_spsc``) now lives in the
+pass framework (``transforms.ToSPSC``); the name is re-exported here for
+compatibility.
 
 The resource model (Fig. 9) is first-order — Vivado is not available in this
 container: BRAM bytes (w/ ping-pong doubling + port replication), FF bits
@@ -21,11 +22,12 @@ container: BRAM bytes (w/ ping-pong doubling + port replication), FF bits
 """
 from __future__ import annotations
 
-import copy
 from dataclasses import dataclass, field
+from typing import Optional
 
 from .ir import LoadOp, Loop, Program, StoreOp
 from .scheduler import Schedule
+from .transforms import to_spsc  # noqa: F401  (compatibility re-export)
 
 
 # ---------------------------------------------------------------------------
@@ -88,6 +90,18 @@ def _iter_space(anc: list[Loop]):
     yield from rec(0, {})
 
 
+def _task_chain(p: Program, task: Loop) -> Optional[list[Loop]]:
+    """The unique loop chain containing every memory access of ``task``,
+    or None when accesses sit under different chains (a multi-loop task the
+    runtime model below cannot express as one iteration counter)."""
+    chains = {tuple(l.uid for l in anc): anc
+              for _, anc in _task_accesses(p, task)}
+    if len(chains) != 1:
+        return None
+    (chain,) = chains.values()
+    return chain
+
+
 def _access_sequence(p: Program, task: Loop, array: str, want_write: bool):
     """Sequential (iteration_counter, address) sequence of a task's accesses
     to ``array``.  The iteration counter is the flattened innermost index."""
@@ -95,9 +109,15 @@ def _access_sequence(p: Program, task: Loop, array: str, want_write: bool):
             if op.array == array and isinstance(op, StoreOp) == want_write]
     if not accs:
         return []
-    # all accesses of our benchmarks live in the innermost body; enumerate the
-    # task's full iteration space once and emit accesses in program order
-    chain = accs[0][1]
+    # the iteration counter must be comparable across every access of the
+    # task, which requires all accesses to live under one loop chain;
+    # analyze_dataflow() pre-filters such tasks, so this is a hard error
+    chain = _task_chain(p, task)
+    if chain is None:
+        raise ValueError(
+            f"dataflow model: task '{task.ivname}' accesses memory from "
+            "multiple loop chains; only single perfect-nest tasks have a "
+            "well-defined FIFO access order (analyze_dataflow rejects these)")
     seq = []
     for q, env in enumerate(_iter_space(chain)):
         for op, anc in accs:
@@ -108,6 +128,14 @@ def _access_sequence(p: Program, task: Loop, array: str, want_write: bool):
 
 def analyze_dataflow(p: Program) -> DataflowInfo:
     tasks = _tasks(p)
+    # each task must be a single perfect nest: the runtime model flattens a
+    # task's iteration space into ONE counter, which is ill-defined when
+    # memory accesses sit under different loop chains (e.g. fused siblings)
+    for ti, t in enumerate(tasks):
+        if _task_accesses(p, t) and _task_chain(p, t) is None:
+            return DataflowInfo(
+                False, f"task {ti} ('{t.ivname}') is not a single perfect "
+                       "nest: accesses span multiple loop chains")
     # array -> (writer task ids, reader task ids)
     writers: dict[str, set[int]] = {}
     readers: dict[str, set[int]] = {}
@@ -134,6 +162,13 @@ def analyze_dataflow(p: Program) -> DataflowInfo:
             return DataflowInfo(False, f"intermediate {name} is a function argument")
         (wtask,) = ws
         (rtask,) = tuple(rs_all - ws)
+        if rtask < wtask:
+            # the consumer runs BEFORE the producer in program order: it
+            # reads the array's initial contents, which no channel process
+            # network can feed — the region is not a dataflow pipeline
+            return DataflowInfo(
+                False, f"{name} consumer (task {rtask}) precedes its "
+                       f"producer (task {wtask})")
         wseq = [a for _, a in _access_sequence(p, tasks[wtask], name, True)]
         rseq = [a for _, a in _access_sequence(p, tasks[rtask], name, False)]
         kind = "fifo" if wseq == rseq else "pingpong"
@@ -160,11 +195,11 @@ def vitis_dataflow_latency(p: Program, s: Schedule) -> tuple[int, DataflowInfo]:
     static_times: list[list[int]] = []
     tails: list[int] = []
     for t in tasks:
-        accs = _task_accesses(p, t)
-        chain = accs[0][1]
+        chain = _task_chain(p, t) if _task_accesses(p, t) else None
         times = []
-        for env in _iter_space(chain):
-            times.append(sum(s.iis[l.uid] * env[l.ivname] for l in chain))
+        if chain is not None:
+            for env in _iter_space(chain):
+                times.append(sum(s.iis[l.uid] * env[l.ivname] for l in chain))
         static_times.append(times)
         tails.append(s.nest_latency(t) - (len(times) and
                                           (times[-1] - times[0]) or 0))
@@ -212,67 +247,6 @@ def vitis_dataflow_latency(p: Program, s: Schedule) -> tuple[int, DataflowInfo]:
         start[ti] = st
         completion[ti] = (st[-1] + tails[ti]) if st else 0
     return max(completion), info
-
-
-# ---------------------------------------------------------------------------
-# SPSC conversion (the paper's benchmark transformation for Vitis)
-# ---------------------------------------------------------------------------
-
-
-def to_spsc(p: Program) -> Program:
-    """Insert copy loops so every intermediate array has exactly one consumer
-    task, duplicating arrays as the paper did for unsharp/harris/flow."""
-    p = copy.deepcopy(p)
-    tasks = _tasks(p)
-    writers: dict[str, set[int]] = {}
-    readers: dict[str, set[int]] = {}
-    for ti, t in enumerate(tasks):
-        for op, _ in _task_accesses(p, t):
-            d = writers if isinstance(op, StoreOp) else readers
-            d.setdefault(op.array, set()).add(ti)
-    fresh = [0]
-
-    insertions: list[tuple[int, Loop]] = []
-    all_names = sorted(set(writers) | set(readers))
-    for name in all_names:
-        ws = writers.get(name, set())
-        rs = sorted(readers.get(name, set()) - ws)
-        if len(ws) > 1 or len(rs) <= 1:
-            continue
-        if ws and p.arrays[name].is_arg:
-            continue  # written function argument: cannot be duplicated (2mm)
-        arr = p.arrays[name]
-        import dataclasses
-
-        dups = []
-        for k, rt in enumerate(rs):
-            dup = f"{name}_cp{k}"
-            p.arrays[dup] = dataclasses.replace(arr, name=dup, is_arg=False)
-            dups.append(dup)
-            # retarget this consumer task's loads
-            for op, _ in _task_accesses(p, tasks[rt]):
-                if isinstance(op, LoadOp) and op.array == name:
-                    op.array = dup
-        # build the copy nest: reads `name` row-major, writes all duplicates
-        fresh[0] += 1
-        tag = f"cp{fresh[0]}"
-        H, W = arr.shape[0], arr.shape[1] if len(arr.shape) > 1 else 1
-        li = Loop(ivname=f"{tag}i", lb=0, ub=H)
-        lj = Loop(ivname=f"{tag}j", lb=0, ub=W)
-        li.body = [lj]
-        from .ir import aff, iv as _iv
-        ld = LoadOp(result=f"%{tag}v", array=name,
-                    index=(_iv(f"{tag}i"), _iv(f"{tag}j"))[: len(arr.shape)])
-        lj.body = [ld] + [
-            StoreOp(array=d, index=(_iv(f"{tag}i"), _iv(f"{tag}j"))[: len(arr.shape)],
-                    value=ld.result) for d in dups]
-        # read-only inputs get their copy nest at the top of the function
-        insertions.append((tuple(ws)[0] if ws else -1, li))
-
-    # insert copy nests right after their producer task (stable program order)
-    for wtask, nest in sorted(insertions, key=lambda x: -x[0]):
-        p.body.insert(wtask + 1, nest)
-    return p
 
 
 # ---------------------------------------------------------------------------

@@ -16,6 +16,7 @@ passes on randomly generated affine programs.
 """
 from __future__ import annotations
 
+import bisect
 import itertools
 from collections import defaultdict
 
@@ -100,14 +101,23 @@ def timed_exec(p: Program, s: Schedule,
     # we store values per (op uid, env items of its ancestors) via seq key env.
 
     # Simpler: evaluate lazily with per-instance env dict carried in events.
-    pending: dict[tuple, list[tuple[int, float]]] = defaultdict(list)
+    # pending[(arr, idx)] = (commit_times sorted ascending, values) — events
+    # are processed in (t, seq) order and every write to one key shares the
+    # array's wr_latency, so commits arrive already sorted and appends keep
+    # the invariant; a read is then one bisect instead of a linear rescan
+    # (the old O(writes) scan per load made large differential tests O(n^2)).
+    pending: dict[tuple, tuple[list[int], list[float]]] = {}
 
     def read_mem(arr, idx, t):
-        best_ct, best_v = None, None
-        for ct, v in pending[(arr, idx)]:
-            if ct <= t and (best_ct is None or ct >= best_ct):
-                best_ct, best_v = ct, v
-        return mem[arr][idx] if best_ct is None else best_v
+        entry = pending.get((arr, idx))
+        if entry is None:
+            return mem[arr][idx]
+        times, vals = entry
+        k = bisect.bisect_right(times, t)
+        # ties on commit time: bisect_right lands after the last equal
+        # entry, so the most recently issued write wins (same rule as the
+        # final-value reduction below)
+        return mem[arr][idx] if k == 0 else vals[k - 1]
 
     # op uid -> ivnames visible at its region (for cross-region SSA lookups)
     ivscope: dict[int, tuple[str, ...]] = {}
@@ -136,13 +146,18 @@ def timed_exec(p: Program, s: Schedule,
             idx = tuple(e.eval(env) for e in op.index)
             v = lookup(op.value, env)
             commit = t + p.arrays[op.array].wr_latency
-            pending[(op.array, idx)].append((commit, v))
+            times, vals = pending.setdefault((op.array, idx), ([], []))
+            if times and commit < times[-1]:  # defensive; see invariant above
+                k = bisect.bisect_right(times, commit)
+                times.insert(k, commit)
+                vals.insert(k, v)
+            else:
+                times.append(commit)
+                vals.append(v)
 
-    for (arr, idx), writes in pending.items():
-        if not writes:
-            continue  # read-only address touched via the defaultdict
-        # final value = last committed write
-        mem[arr][idx] = sorted(writes, key=lambda w: w[0])[-1][1]
+    for (arr, idx), (times, vals) in pending.items():
+        # final value = last committed write (ties: most recently issued)
+        mem[arr][idx] = vals[-1]
     return mem
 
 

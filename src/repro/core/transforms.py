@@ -1,0 +1,713 @@
+"""Pass-based program transforms (DESIGN.md §6).
+
+The compile path used to be a hard-coded 3-step flow with exactly one ad-hoc
+transform (``to_spsc``, hand-rolled inside ``dataflow.py``).  HIDA-style
+dataflow HLS compilers get their leverage from a *transform + DSE* layer
+above the scheduler; this module is that layer's transform half.
+
+A ``Pass`` is a pure function ``Program -> Program`` (the input is never
+mutated) with a semantics-preservation obligation: for every pass ``T``,
+
+    sequential_exec(p, x) == sequential_exec(T(p), x)    for all inputs x
+
+restricted to the arrays of ``p`` (a pass may introduce fresh arrays — e.g.
+``ToSPSC``'s copies — but those must be dead on entry).  ``PassManager``
+optionally discharges the obligation by differential execution after every
+pass (``verify=True``); the DSE driver (``autotune.explore``) runs every
+candidate pipeline under that mode.
+
+Transforms:
+
+  * ``Normalize``             — expand ``unroll``-marked loops (ir.normalize
+                                as a pass; the builder already runs it).
+  * ``LoopUnroll(factor)``    — partial unroll: strip-mine by ``factor`` and
+                                inline the inner copies.  Execution order is
+                                unchanged, so semantics are preserved by
+                                construction.
+  * ``LoopTile(sizes)``       — strip-mine named loops into outer/inner
+                                pairs (order-preserving tiling; profitable
+                                as a phase-ordering knob for the scheduler's
+                                occupancy constraint).
+  * ``ArrayPartition(dims)``  — rewrite ``ArrayDecl.partition``/``ports`` so
+                                the scheduler's port pseudo-dependences see
+                                banked parallelism.  Pure metadata.
+  * ``FuseProducerConsumer``  — merge adjacent top-level nests with equal
+                                bounds when an exact ILP legality check
+                                proves no dependence is reversed.
+  * ``ToSPSC``                — the paper's §5.2 benchmark transformation
+                                (migrated here from ``dataflow.py``).
+"""
+from __future__ import annotations
+
+import copy
+import itertools
+import time
+from dataclasses import dataclass, replace as dc_replace
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from .ilp import solve_ilp
+from .ir import (AffExpr, ArithOp, ConstOp, LoadOp, Loop, Program, StoreOp,
+                 aff, iv, normalize)
+
+
+# ---------------------------------------------------------------------------
+# Cloning / substitution helpers
+# ---------------------------------------------------------------------------
+
+
+def clone_program(p: Program) -> Program:
+    """Deep copy without the interpreter's per-instance def cache (it maps
+    SSA names to op *objects* and would go stale under rewriting)."""
+    q = copy.deepcopy(p)
+    q.__dict__.pop("_def_cache", None)
+    return q
+
+
+class _Namer:
+    """Fresh-name factory for SSA values and ivs cloned by a transform."""
+
+    def __init__(self, tag: str):
+        self.tag = tag
+        self._n = itertools.count()
+
+    def __call__(self, old: str) -> str:
+        return f"{old}_{self.tag}{next(self._n)}"
+
+
+def _subst_all(e: AffExpr, sub: dict[str, AffExpr]) -> AffExpr:
+    for k, v in sub.items():
+        e = e.subst(k, v)
+    return e
+
+
+def _clone_body(items, sub: dict[str, AffExpr], ssa: dict[str, str],
+                namer: _Namer) -> list:
+    """Deep-copy ops/loops applying the affine substitution ``sub`` to
+    indices, renaming cloned loop ivs and SSA results via ``namer``."""
+    out = []
+    for it in items:
+        if isinstance(it, Loop):
+            sub2 = dict(sub)
+            new_iv = namer(it.ivname)
+            sub2[it.ivname] = iv(new_iv)
+            lp = Loop(ivname=new_iv, lb=it.lb, ub=it.ub, pipeline=it.pipeline,
+                      ii=it.ii, unroll=it.unroll)
+            lp.body = _clone_body(it.body, sub2, ssa, namer)
+            out.append(lp)
+        elif isinstance(it, ConstOp):
+            r = namer(it.result)
+            ssa[it.result] = r
+            out.append(ConstOp(result=r, value=it.value))
+        elif isinstance(it, LoadOp):
+            r = namer(it.result)
+            ssa[it.result] = r
+            out.append(LoadOp(result=r, array=it.array,
+                              index=tuple(_subst_all(e, sub) for e in it.index)))
+        elif isinstance(it, StoreOp):
+            out.append(StoreOp(array=it.array,
+                               index=tuple(_subst_all(e, sub) for e in it.index),
+                               value=ssa.get(it.value, it.value)))
+        elif isinstance(it, ArithOp):
+            r = namer(it.result)
+            ssa[it.result] = r
+            out.append(ArithOp(result=r, fn=it.fn,
+                               args=tuple(ssa.get(a, a) for a in it.args)))
+        else:
+            raise TypeError(it)
+    return out
+
+
+def _rewrite_indices(items, sub: dict[str, AffExpr]) -> None:
+    """In-place affine substitution on every access index below ``items``."""
+    for it in items:
+        if isinstance(it, Loop):
+            _rewrite_indices(it.body, sub)
+        elif isinstance(it, (LoadOp, StoreOp)):
+            it.index = tuple(_subst_all(e, sub) for e in it.index)
+
+
+# ---------------------------------------------------------------------------
+# Pass / PassManager
+# ---------------------------------------------------------------------------
+
+
+class TransformError(ValueError):
+    """A pass was asked to do something it cannot do soundly."""
+
+
+class PassVerificationError(AssertionError):
+    """Differential execution found a semantics change."""
+
+
+class Pass:
+    """A semantics-preserving program transform.
+
+    Contract (DESIGN.md §6): ``apply`` is pure — it never mutates its input
+    (clone first, rewrite the clone) — and the output must be sequentially
+    equivalent to the input on the input's arrays.  A pass that does not
+    apply (no matching loops, illegal fusion, ...) returns an unchanged
+    program rather than raising, so pipelines compose.
+    """
+
+    name: str = "pass"
+
+    def apply(self, p: Program) -> Program:
+        raise NotImplementedError
+
+    def __call__(self, p: Program) -> Program:
+        return self.apply(p)
+
+    def __repr__(self):
+        return f"<{type(self).__name__} {self.name}>"
+
+
+@dataclass
+class PassReport:
+    name: str
+    changed: bool
+    seconds: float
+
+
+def _fingerprint(p: Program) -> str:
+    """Deep textual snapshot of a program (ops, loops, arrays)."""
+    return repr([(type(n).__name__, vars(n)) for n, _ in p.walk()]) + \
+        repr(sorted(p.arrays.items()))
+
+
+class PassManager:
+    """Run a pipeline of passes, optionally verifying each one.
+
+    ``verify=True`` discharges every pass's preservation obligation by
+    differential execution (``differential_check``) and raises
+    ``PassVerificationError`` naming the offending pass on mismatch.  It
+    also enforces the purity half of the contract: a pass that mutates its
+    input in place (and would therefore dodge the differential oracle by
+    returning the same corrupted object) is caught by a pre/post
+    fingerprint comparison.
+    """
+
+    def __init__(self, passes: Sequence[Pass], *, verify: bool = False,
+                 seeds: Sequence[int] = (0,)):
+        self.passes = list(passes)
+        self.verify = verify
+        self.seeds = tuple(seeds)
+        self.reports: list[PassReport] = []
+
+    def run(self, p: Program) -> Program:
+        self.reports = []
+        cur = p
+        for ps in self.passes:
+            t0 = time.perf_counter()
+            before = _fingerprint(cur) if self.verify else None
+            nxt = ps.apply(cur)
+            if self.verify:
+                if _fingerprint(cur) != before:
+                    raise PassVerificationError(
+                        f"pass '{ps.name}' mutated its input program "
+                        "(passes must clone, then rewrite the clone)")
+                if nxt is not cur:  # identical object == proven no-op
+                    try:
+                        differential_check(cur, nxt, seeds=self.seeds)
+                    except AssertionError as e:
+                        raise PassVerificationError(
+                            f"pass '{ps.name}' changed program semantics: {e}"
+                        ) from e
+            self.reports.append(PassReport(
+                name=ps.name, changed=nxt is not cur,
+                seconds=time.perf_counter() - t0))
+            cur = nxt
+        return cur
+
+    def describe(self) -> str:
+        return " | ".join(ps.name for ps in self.passes)
+
+
+def differential_check(p: Program, q: Program,
+                       seeds: Sequence[int] = (0,)) -> None:
+    """Assert sequential equivalence of ``q`` to ``p`` on ``p``'s arrays.
+
+    Fresh arrays introduced by ``q`` (e.g. SPSC copies) get independent
+    random contents — a sound transform must treat them as dead on entry.
+    """
+    from .sim import make_inputs, sequential_exec
+
+    for name, arr in p.arrays.items():
+        if name not in q.arrays:
+            raise AssertionError(f"array {name} disappeared")
+        if tuple(q.arrays[name].shape) != tuple(arr.shape):
+            raise AssertionError(f"array {name} changed shape")
+    for seed in seeds:
+        base = make_inputs(p, seed)
+        extra = make_inputs(q, seed + 7919)
+        qin = {**extra, **{k: v.copy() for k, v in base.items()}}
+        out_p = sequential_exec(p, base)
+        out_q = sequential_exec(q, qin)
+        for k in out_p:
+            if not np.allclose(out_p[k], out_q[k], rtol=1e-12, atol=0):
+                raise AssertionError(f"array {k} differs (seed {seed})")
+
+
+# ---------------------------------------------------------------------------
+# Normalize
+# ---------------------------------------------------------------------------
+
+
+class Normalize(Pass):
+    """``ir.normalize`` (complete expansion of ``unroll``-marked loops) as a
+    pure pass.  Idempotent; the builder already normalizes, so this mostly
+    guards hand-built Programs entering the pipeline."""
+
+    name = "normalize"
+
+    def apply(self, p: Program) -> Program:
+        if not any(l.unroll for l in p.loops()):
+            return p
+        return normalize(clone_program(p))
+
+
+# ---------------------------------------------------------------------------
+# LoopUnroll (partial unroll by a factor)
+# ---------------------------------------------------------------------------
+
+
+class LoopUnroll(Pass):
+    """Partial unroll: strip-mine a loop by ``factor`` and inline the inner
+    copies, so the loop body holds ``factor`` consecutive iterations.
+
+    Targets ``ivs`` (names) or, by default, every *innermost* loop whose trip
+    count the factor divides.  Iterations execute in the original order, so
+    sequential semantics are preserved by construction; the payoff is that
+    the parent's occupancy floor (II_outer >= trip_inner * II_inner) drops
+    when the scheduler finds an II below ``factor`` * old_II for the widened
+    body — spending datapath resources (DSP) for latency.
+    """
+
+    def __init__(self, factor: int, ivs: Optional[Sequence[str]] = None):
+        if factor < 2:
+            raise TransformError(f"unroll factor must be >= 2, got {factor}")
+        self.factor = factor
+        self.ivs = None if ivs is None else set(ivs)
+        self.name = f"unroll(x{factor}" + \
+            (f",{','.join(sorted(self.ivs))})" if self.ivs else ")")
+
+    def _eligible(self, loop: Loop) -> bool:
+        if loop.unroll or loop.trip % self.factor or loop.lb != 0:
+            return False
+        if loop.ii is not None:
+            # an explicit II pragma (e.g. an interface rate) is stated for
+            # THIS loop's body; the widened body would silently drop it
+            return False
+        if self.ivs is not None:
+            return loop.ivname in self.ivs
+        return not any(isinstance(ch, Loop) for ch in loop.body)  # innermost
+
+    def apply(self, p: Program) -> Program:
+        if not any(self._eligible(l) for l in p.loops()):
+            return p
+        q = clone_program(p)
+        namer = _Namer("u")
+
+        def rec(items):
+            out = []
+            for it in items:
+                if not isinstance(it, Loop):
+                    out.append(it)
+                    continue
+                it.body = rec(it.body)
+                if self._eligible(it):
+                    f = self.factor
+                    body = []
+                    for k in range(f):
+                        # original iv value = f*iv_new + k
+                        sub = {it.ivname: aff(it.ivname) * f + k}
+                        ssa: dict[str, str] = {}
+                        body.extend(_clone_body(it.body, sub, ssa, namer))
+                    nl = Loop(ivname=it.ivname, lb=0, ub=it.trip // f,
+                              pipeline=it.pipeline, ii=None)
+                    nl.body = body
+                    out.append(nl)
+                else:
+                    out.append(it)
+            return out
+
+        q.body = rec(q.body)
+        return q
+
+
+# ---------------------------------------------------------------------------
+# LoopTile (order-preserving strip-mining)
+# ---------------------------------------------------------------------------
+
+
+class LoopTile(Pass):
+    """Strip-mine the named loops: ``for i in [0, N)`` becomes
+    ``for i_t in [0, N/s): for i_b in [0, s): i = s*i_t + i_b``.
+
+    The dynamic execution order is untouched (this is tiling without
+    interchange), so semantics are preserved by construction.  Loops whose
+    trip the size does not divide are left alone.
+    """
+
+    def __init__(self, sizes: dict[str, int]):
+        if not sizes or any(s < 2 for s in sizes.values()):
+            raise TransformError(f"tile sizes must be >= 2: {sizes}")
+        self.sizes = dict(sizes)
+        self.name = "tile(" + ",".join(
+            f"{k}:{v}" for k, v in sorted(self.sizes.items())) + ")"
+
+    def _eligible(self, loop: Loop) -> bool:
+        s = self.sizes.get(loop.ivname)
+        return (s is not None and not loop.unroll and loop.lb == 0
+                and loop.trip % s == 0 and loop.trip // s >= 2)
+
+    def apply(self, p: Program) -> Program:
+        if not any(self._eligible(l) for l in p.loops()):
+            return p
+        q = clone_program(p)
+
+        def rec(items):
+            out = []
+            for it in items:
+                if not isinstance(it, Loop):
+                    out.append(it)
+                    continue
+                it.body = rec(it.body)
+                if self._eligible(it):
+                    s = self.sizes[it.ivname]
+                    ot, ib = f"{it.ivname}_t", f"{it.ivname}_b"
+                    _rewrite_indices(it.body, {it.ivname: aff(ot) * s + aff(ib)})
+                    inner = Loop(ivname=ib, lb=0, ub=s, pipeline=it.pipeline,
+                                 ii=it.ii)
+                    inner.body = it.body
+                    outer = Loop(ivname=ot, lb=0, ub=it.trip // s,
+                                 pipeline=it.pipeline, ii=None)
+                    outer.body = [inner]
+                    out.append(outer)
+                else:
+                    out.append(it)
+            return out
+
+        q.body = rec(q.body)
+        return q
+
+
+# ---------------------------------------------------------------------------
+# ArrayPartition
+# ---------------------------------------------------------------------------
+
+
+class ArrayPartition(Pass):
+    """Rewrite ``ArrayDecl.partition`` (and optionally ``ports``) so the
+    scheduler's port pseudo-dependences can exploit banked parallelism.
+
+    ``dims=None`` means complete partitioning (every dim banked — the
+    paper's supported ``array_partition`` mode); ``arrays=None`` targets
+    every array that is not already fully partitioned.  Purely metadata:
+    sequential semantics are unaffected, only the dependence analysis and
+    the resource model see the change (BRAM -> FF migration).
+    """
+
+    def __init__(self, arrays: Optional[Sequence[str]] = None,
+                 dims: Optional[Sequence[int]] = None,
+                 ports: Optional[Sequence[str]] = None):
+        self.arrays = None if arrays is None else tuple(arrays)
+        self.dims = None if dims is None else tuple(dims)
+        self.ports = None if ports is None else tuple(ports)
+        tgt = "*" if self.arrays is None else ",".join(self.arrays)
+        dd = "full" if self.dims is None else ",".join(map(str, self.dims))
+        self.name = f"partition({tgt};dims={dd})"
+
+    def apply(self, p: Program) -> Program:
+        todo = {}
+        for name, arr in p.arrays.items():
+            if self.arrays is not None and name not in self.arrays:
+                continue
+            dims = tuple(range(len(arr.shape))) if self.dims is None else \
+                tuple(d for d in self.dims if d < len(arr.shape))
+            new_ports = self.ports or arr.ports
+            if tuple(arr.partition) == dims and tuple(arr.ports) == tuple(new_ports):
+                continue
+            if arr.kind == "reg":
+                continue  # already port-free registers
+            todo[name] = (dims, tuple(new_ports))
+        if not todo:
+            return p
+        q = clone_program(p)
+        for name, (dims, ports) in todo.items():
+            q.arrays[name] = dc_replace(q.arrays[name], partition=dims,
+                                        ports=ports)
+        return q
+
+
+# ---------------------------------------------------------------------------
+# FuseProducerConsumer
+# ---------------------------------------------------------------------------
+
+
+def _perfect_chain(item) -> Optional[tuple[list[Loop], list]]:
+    """(loops outermost-first, innermost body) for a perfect nest, else None."""
+    if not isinstance(item, Loop):
+        return None
+    loops = [item]
+    body = item.body
+    while True:
+        inner = [ch for ch in body if isinstance(ch, Loop)]
+        if not inner:
+            return loops, body
+        if len(inner) != 1 or len(body) != 1:
+            return None  # non-perfect: ops alongside a loop / sibling loops
+        loops.append(inner[0])
+        body = inner[0].body
+
+
+def _mem_ops_of(items) -> list:
+    out = []
+    for it in items:
+        if isinstance(it, Loop):
+            out.extend(_mem_ops_of(it.body))
+        elif isinstance(it, (LoadOp, StoreOp)):
+            out.append(it)
+    return out
+
+
+def _fusion_hazard(opA, opB, loopsA: list[Loop], loopsB: list[Loop]) -> bool:
+    """Exact legality core.  ``opA`` (from the first nest) and ``opB`` (from
+    the second) touch the same array and at least one writes.  In the
+    original program every dynamic instance of ``opA`` precedes every
+    instance of ``opB``; after fusion instance order is lexicographic in the
+    shared iteration vector with A's body first.  The fusion is illegal iff
+
+        exists va, vb :  addr_A(va) == addr_B(vb)  and  va >lex vb
+
+    (at va == vb A still precedes B inside the fused body).  Decided exactly
+    with one small feasibility ILP per lexicographic carry level.
+    """
+    d = len(loopsA)
+    n = 2 * d
+    col_a = {l.ivname: i for i, l in enumerate(loopsA)}
+    col_b = {l.ivname: d + i for i, l in enumerate(loopsB)}
+
+    A_eq_addr, b_eq_addr = [], []
+    for dim in range(len(opA.index)):
+        ea, eb = opA.index[dim], opB.index[dim]
+        row = np.zeros(n)
+        for nm, c in ea.coeffs.items():
+            row[col_a[nm]] += c
+        for nm, c in eb.coeffs.items():
+            row[col_b[nm]] -= c
+        A_eq_addr.append(row)
+        b_eq_addr.append(float(eb.const - ea.const))
+
+    bounds = [(l.lb, l.ub - 1) for l in loopsA] + \
+             [(l.lb, l.ub - 1) for l in loopsB]
+    c = np.zeros(n)
+
+    for lvl in range(d):  # va >lex vb carried at level lvl
+        A_eq = list(A_eq_addr)
+        b_eq = list(b_eq_addr)
+        for k in range(lvl):
+            row = np.zeros(n)
+            row[k], row[d + k] = 1.0, -1.0
+            A_eq.append(row)
+            b_eq.append(0.0)
+        row = np.zeros(n)  # vb_lvl - va_lvl <= -1
+        row[d + lvl], row[lvl] = 1.0, -1.0
+        res = solve_ilp(c, np.asarray([row]), np.asarray([-1.0]),
+                        np.asarray(A_eq), np.asarray(b_eq), bounds=bounds)
+        if res.ok:
+            return True
+        if res.status != "infeasible":
+            raise RuntimeError(
+                f"fusion legality ILP unresolved ({res.status}) for "
+                f"{opA!r} / {opB!r}")
+    return False
+
+
+class FuseProducerConsumer(Pass):
+    """Fuse adjacent top-level producer/consumer nests.
+
+    Candidates: two adjacent top-level *perfect* nests with identical depth
+    and bounds where the first writes an array the second reads.  Legality
+    is decided exactly (``_fusion_hazard``): for every access pair on a
+    shared array with at least one write, no dynamic dependence may be
+    reversed by fusing.  The pass fuses greedily until a fixpoint, so a
+    pointwise chain (e.g. unsharp's sharpen+mask) collapses into one nest
+    the scheduler can pipeline with a single II.
+    """
+
+    name = "fuse"
+
+    def __init__(self, max_fusions: Optional[int] = None):
+        self.max_fusions = max_fusions
+
+    # -- candidate test -----------------------------------------------------
+    def _fusable(self, p: Program, a, b) -> bool:
+        ca, cb = _perfect_chain(a), _perfect_chain(b)
+        if ca is None or cb is None:
+            return False
+        loopsA, _ = ca
+        loopsB, _ = cb
+        if len(loopsA) != len(loopsB):
+            return False
+        if any((x.lb, x.ub) != (y.lb, y.ub) for x, y in zip(loopsA, loopsB)):
+            return False
+        opsA, opsB = _mem_ops_of([a]), _mem_ops_of([b])
+        wrote = {op.array for op in opsA if isinstance(op, StoreOp)}
+        read_b = {op.array for op in opsB if isinstance(op, LoadOp)}
+        if not (wrote & read_b):
+            return False  # not a producer/consumer pair
+        for opA in opsA:
+            for opB in opsB:
+                if opA.array != opB.array:
+                    continue
+                if not (isinstance(opA, StoreOp) or isinstance(opB, StoreOp)):
+                    continue
+                if _fusion_hazard(opA, opB, loopsA, loopsB):
+                    return False
+        return True
+
+    def _fuse(self, a: Loop, b: Loop, namer: _Namer) -> Loop:
+        loopsA, bodyA = _perfect_chain(a)
+        loopsB, bodyB = _perfect_chain(b)
+        # the B->A iv renaming must be SIMULTANEOUS: with crossed names
+        # (B's outer called like A's inner), sequential substitution would
+        # chain j->i->j.  Route through fresh temporaries instead.
+        tmp = {lb.ivname: iv(f"__fuse_tmp{k}") for k, lb in enumerate(loopsB)}
+        ssa: dict[str, str] = {}
+        cloned = _clone_body(bodyB, tmp, ssa, namer)
+        _rewrite_indices(cloned, {f"__fuse_tmp{k}": iv(la.ivname)
+                                  for k, la in enumerate(loopsA)})
+        bodyA.extend(cloned)
+        return a
+
+    def apply(self, p: Program) -> Program:
+        q = clone_program(p)
+        namer = _Namer("f")
+        fused = 0
+        changed = True
+        any_change = False
+        while changed and (self.max_fusions is None or fused < self.max_fusions):
+            changed = False
+            for i in range(len(q.body) - 1):
+                a, b = q.body[i], q.body[i + 1]
+                if isinstance(a, Loop) and isinstance(b, Loop) and \
+                        self._fusable(q, a, b):
+                    q.body[i:i + 2] = [self._fuse(a, b, namer)]
+                    fused += 1
+                    changed = any_change = True
+                    break
+        return q if any_change else p
+
+
+# ---------------------------------------------------------------------------
+# ToSPSC (migrated from dataflow.py — the paper's §5.2 transformation)
+# ---------------------------------------------------------------------------
+
+
+def _top_tasks(p: Program) -> list[Loop]:
+    ts = []
+    for item in p.body:
+        if not isinstance(item, Loop):
+            raise TransformError(
+                "to_spsc expects top-level loop nests only")
+        ts.append(item)
+    return ts
+
+
+def _task_mem_ops(task: Loop) -> list:
+    return _mem_ops_of([task])
+
+
+def _spsc_targets(p: Program) -> list[tuple[str, set[int], list[int]]]:
+    """(array, writer tasks, external consumer tasks) for every array the
+    SPSC conversion applies to."""
+    tasks = _top_tasks(p)
+    writers: dict[str, set[int]] = {}
+    readers: dict[str, set[int]] = {}
+    for ti, t in enumerate(tasks):
+        for op in _task_mem_ops(t):
+            d = writers if isinstance(op, StoreOp) else readers
+            d.setdefault(op.array, set()).add(ti)
+    out = []
+    for name in sorted(set(writers) | set(readers)):
+        ws = writers.get(name, set())
+        rs = sorted(readers.get(name, set()) - ws)
+        if len(ws) > 1 or len(rs) <= 1:
+            continue
+        if ws and p.arrays[name].is_arg:
+            continue  # written function argument: cannot be duplicated (2mm)
+        if ws and any(rt < tuple(ws)[0] for rt in rs):
+            # a consumer running BEFORE the producer reads the array's
+            # initial contents — its copy nest (inserted after the producer)
+            # could not feed it; such an array is no dataflow channel at all
+            continue
+        out.append((name, ws, rs))
+    return out
+
+
+def to_spsc(p: Program) -> Program:
+    """Insert copy loops so every intermediate array has exactly one consumer
+    task, duplicating arrays as the paper did for unsharp/harris/flow.
+    Returns ``p`` unchanged (same object) when nothing applies."""
+    if not _spsc_targets(p):
+        return p
+    p = clone_program(p)
+    tasks = _top_tasks(p)
+    fresh = [0]
+
+    insertions: list[tuple[int, Loop]] = []
+    for name, ws, rs in _spsc_targets(p):
+        arr = p.arrays[name]
+        dups = []
+        for k, rt in enumerate(rs):
+            dup = f"{name}_cp{k}"
+            p.arrays[dup] = dc_replace(arr, name=dup, is_arg=False)
+            dups.append(dup)
+            # retarget this consumer task's loads
+            for op in _task_mem_ops(tasks[rt]):
+                if isinstance(op, LoadOp) and op.array == name:
+                    op.array = dup
+        # build the copy nest: reads `name` row-major, writes all duplicates
+        fresh[0] += 1
+        tag = f"cp{fresh[0]}"
+        H, W = arr.shape[0], arr.shape[1] if len(arr.shape) > 1 else 1
+        li = Loop(ivname=f"{tag}i", lb=0, ub=H)
+        lj = Loop(ivname=f"{tag}j", lb=0, ub=W)
+        li.body = [lj]
+        ld = LoadOp(result=f"%{tag}v", array=name,
+                    index=(iv(f"{tag}i"), iv(f"{tag}j"))[: len(arr.shape)])
+        lj.body = [ld] + [
+            StoreOp(array=d, index=(iv(f"{tag}i"), iv(f"{tag}j"))[: len(arr.shape)],
+                    value=ld.result) for d in dups]
+        # read-only inputs get their copy nest at the top of the function
+        insertions.append((tuple(ws)[0] if ws else -1, li))
+
+    # insert copy nests right after their producer task (stable program order)
+    for wtask, nest in sorted(insertions, key=lambda x: -x[0]):
+        p.body.insert(wtask + 1, nest)
+    return p
+
+
+class ToSPSC(Pass):
+    """``to_spsc`` as a pass (multi-consumer arrays become SPSC chains)."""
+
+    name = "to_spsc"
+
+    def apply(self, p: Program) -> Program:
+        return to_spsc(p)
+
+
+# ---------------------------------------------------------------------------
+# Registry (the DSE driver and tests iterate over this)
+# ---------------------------------------------------------------------------
+
+TRANSFORMS: dict[str, Callable[..., Pass]] = {
+    "normalize": Normalize,
+    "loop_unroll": LoopUnroll,
+    "loop_tile": LoopTile,
+    "array_partition": ArrayPartition,
+    "fuse_producer_consumer": FuseProducerConsumer,
+    "to_spsc": ToSPSC,
+}

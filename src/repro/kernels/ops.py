@@ -40,23 +40,40 @@ def wkv6(r, k, v, w, u, *, chunk=64, interpret=None):
 def ilp_halo_rows(taps: int = 3) -> int:
     """Derive the stencil_pipeline line-buffer halo from the paper's
     memory-dependence ILP: schedule a two-nest conv chain and convert the
-    producer->consumer slack into rows (slack = -(halo rows) * II_row)."""
+    producer->consumer slack into rows (slack = -(halo rows) * II_row).
+
+    The two-nest chain is produced by the pass pipeline rather than built by
+    hand: the producer is written as raw accumulation + a pointwise scale
+    nest, and ``FuseProducerConsumer`` (with an exact ILP legality proof)
+    collapses them into the single producer nest whose RAW edges on ``mid``
+    carry the halo."""
     from repro.core import compile_program
     from repro.core.ir import ProgramBuilder
+    from repro.core.transforms import FuseProducerConsumer, Normalize, PassManager
 
     n = 8
     b = ProgramBuilder("halo_probe")
+    Hm = n + taps - 1
     b.array("img", (n + 2 * (taps - 1), n), partition=(0, 1), ports=("w", "r"))
-    b.array("mid", (n + taps - 1, n), partition=(0, 1), ports=("w", "r"))
+    b.array("acc", (Hm, n), partition=(0, 1), ports=("w", "r"))
+    b.array("mid", (Hm, n), partition=(0, 1), ports=("w", "r"))
     b.array("out", (n, n), partition=(0, 1), ports=("w", "r"))
-    for src, dst, tag, extent in (("img", "mid", "p", n + taps - 1),
-                                  ("mid", "out", "c", n)):
-        with b.loop(f"{tag}i", 0, extent) as i:
-            with b.loop(f"{tag}j", 0, n) as j:
-                acc = [b.mul(b.load(src, i + t, j), b.const(1.0 / taps))
-                       for t in range(taps)]
-                b.store(dst, b.sum_tree(acc), i, j)
-    p = b.build()
+    # producer, unfused form: accumulate taps, then scale pointwise
+    with b.loop("pi", 0, Hm) as i:
+        with b.loop("pj", 0, n) as j:
+            t = [b.load("img", i + t_, j) for t_ in range(taps)]
+            b.store("acc", b.sum_tree(t), i, j)
+    with b.loop("si", 0, Hm) as i:
+        with b.loop("sj", 0, n) as j:
+            b.store("mid", b.mul(b.load("acc", i, j), b.const(1.0 / taps)), i, j)
+    # consumer conv over the fused producer's output
+    with b.loop("ci", 0, n) as i:
+        with b.loop("cj", 0, n) as j:
+            t = [b.mul(b.load("mid", i + t_, j), b.const(1.0 / taps))
+                 for t_ in range(taps)]
+            b.store("out", b.sum_tree(t), i, j)
+    p = PassManager([Normalize(), FuseProducerConsumer()], verify=True).run(b.build())
+    assert len(p.body) == 2, "accumulate+scale must fuse into the producer"
     s = compile_program(p)
     prod, _ = p.body
     ii_row = s.iis[prod.uid]

@@ -1,0 +1,57 @@
+"""Resource-aware DSE driver (autotune.explore, DESIGN.md §6).
+
+The acceptance demo: for real benchmarks, ``explore`` must find a
+transformed program whose scheduled latency beats the untransformed
+``compile_program`` schedule at equal-or-lower BRAM/DSP, and the winner
+must pass the brute-force schedule validator + timed-execution oracle
+(``validate=True`` asserts both inside explore).
+"""
+import pytest
+
+from repro.core import compile_program, explore
+from repro.core.programs import harris, two_mm, unsharp
+
+
+@pytest.mark.parametrize("mk,n", [(two_mm, 6), (harris, 6)])
+def test_explore_beats_baseline_iso_resources(mk, n):
+    p = mk(n, storage="bram")
+    r = explore(p, verify=True, validate=True, max_candidates=8,
+                unroll_factors=(2,), tile_sizes=())
+    assert r.best.latency < r.baseline.latency, (r.best.desc, r.best.latency)
+    assert r.best.res["bram_bytes"] <= r.baseline.res["bram_bytes"] + 1e-9
+    assert r.best.res["dsp"] <= r.baseline.res["dsp"] + 1e-9
+    assert r.best.within_budget
+    assert r.speedup > 1.0
+
+
+def test_explore_default_budget_is_iso_resource():
+    p = two_mm(4)
+    r = explore(p, verify=True, max_candidates=4, unroll_factors=(),
+                tile_sizes=())
+    assert r.budget == {"bram_bytes": r.baseline.res["bram_bytes"],
+                        "dsp": r.baseline.res["dsp"]}
+    for c in r.candidates:
+        assert c.within_budget == all(
+            c.res[k] <= v + 1e-9 for k, v in r.budget.items())
+
+
+def test_explore_budget_gates_unroll():
+    """Unrolling doubles datapath DSPs: it must be flagged over-budget under
+    the iso-resource budget, but become eligible when the budget allows."""
+    p = unsharp(8, storage="bram")
+    iso = explore(p, max_candidates=6, unroll_factors=(2,), tile_sizes=())
+    unrolled = [c for c in iso.candidates if "unroll" in c.desc]
+    assert unrolled and all(not c.within_budget for c in unrolled)
+    assert iso.best.within_budget
+
+    roomy = explore(p, budget={"dsp": 1e9, "bram_bytes": 1e9},
+                    max_candidates=6, unroll_factors=(2,), tile_sizes=())
+    unrolled = [c for c in roomy.candidates if "unroll" in c.desc]
+    assert unrolled and all(c.within_budget for c in unrolled)
+
+
+def test_explore_baseline_matches_compile_program():
+    p = two_mm(4)
+    r = explore(p, max_candidates=2, unroll_factors=(), tile_sizes=())
+    assert r.baseline.latency == compile_program(p).completion_time()
+    assert r.best.latency <= r.baseline.latency

@@ -1,0 +1,269 @@
+"""Property tests for the pass pipeline (DESIGN.md §6).
+
+Every transform carries one obligation: ``sequential_exec(p) ==
+sequential_exec(T(p))`` on ``p``'s arrays for any input, plus "the
+transformed program still schedules" (``compile_program`` succeeds and the
+brute-force ``validate_schedule`` oracle is clean).  We discharge it over
+the benchmark corpus, ~30 random affine programs, and random transform
+compositions.  Full-size corpus runs are ``-m slow``.
+"""
+import numpy as np
+import pytest
+
+from repro.core import compile_program
+from repro.core.ir import Loop, Program, ProgramBuilder, StoreOp
+from repro.core.programs import BENCHMARKS
+from repro.core.sim import (make_inputs, sequential_exec, timed_exec,
+                            validate_schedule)
+from repro.core.transforms import (ArrayPartition, FuseProducerConsumer,
+                                   LoopTile, LoopUnroll, Normalize, Pass,
+                                   PassManager, PassVerificationError, ToSPSC,
+                                   differential_check, to_spsc)
+
+from test_property import random_program
+
+# Reduced benchmark sizes keep a corpus x transforms sweep inside tier-1.
+_SMALL = {"unsharp": 8, "harris": 6, "dus": 8, "optical_flow": 6, "two_mm": 4}
+
+
+def _small(name, storage="reg"):
+    return BENCHMARKS[name](_SMALL[name], storage=storage)
+
+
+def _transform_menu(p):
+    """One instance of every transform, parameterized from the program."""
+    inner = [l for l in p.loops()
+             if not any(isinstance(ch, Loop) for ch in l.body)]
+    unroll_f = next((f for f in (2, 4) for l in inner if l.trip % f == 0), 2)
+    tiles = {l.ivname: 2 for l in p.loops() if l.trip % 2 == 0 and l.trip >= 4}
+    menu = [Normalize(), FuseProducerConsumer(), ArrayPartition(),
+            LoopUnroll(unroll_f), ToSPSC()]
+    if tiles:
+        menu.append(LoopTile(tiles))
+    return menu
+
+
+# ---------------------------------------------------------------------------
+# Corpus: every transform preserves sequential semantics
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(BENCHMARKS))
+@pytest.mark.parametrize("storage", ["reg", "bram"])
+def test_corpus_transform_equivalence(name, storage):
+    p = _small(name, storage)
+    for T in _transform_menu(p):
+        q = T.apply(p)
+        differential_check(p, q, seeds=(0, 1))
+
+
+@pytest.mark.parametrize("name", ["unsharp", "dus", "two_mm"])
+def test_corpus_transformed_still_schedules(name):
+    """Transformed programs must still compile, and their schedules must
+    pass the brute-force validator and the timed-execution oracle."""
+    p = _small(name, "bram")
+    pipelines = [
+        [FuseProducerConsumer()],
+        [ArrayPartition()],
+        [ArrayPartition(), FuseProducerConsumer()],
+    ]
+    for passes in pipelines:
+        q = PassManager(passes, verify=True).run(p)
+        s = compile_program(q)
+        assert s.feasible
+        assert validate_schedule(q, s) == []
+        inp = make_inputs(q, 0)
+        got, want = timed_exec(q, s, inp), sequential_exec(q, inp)
+        for k in want:
+            np.testing.assert_allclose(got[k], want[k], rtol=1e-12, err_msg=k)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", sorted(BENCHMARKS))
+def test_corpus_transform_equivalence_fullsize(name):
+    p = BENCHMARKS[name](storage="bram")
+    for T in _transform_menu(p):
+        differential_check(p, T.apply(p), seeds=(0,))
+
+
+# ---------------------------------------------------------------------------
+# Random programs + random compositions
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(30))
+def test_random_program_transform_composition(seed):
+    """Random affine program, random 2-3 transform composition: sequential
+    equivalence must hold and the result must still schedule cleanly."""
+    rng = np.random.default_rng(5000 + seed)
+    p = random_program(seed)
+    menu = _transform_menu(p)
+    picks = [menu[int(rng.integers(0, len(menu)))]
+             for _ in range(int(rng.integers(2, 4)))]
+    pm = PassManager(picks, verify=True, seeds=(seed,))
+    q = pm.run(p)  # verify=True raises PassVerificationError on mismatch
+    s = compile_program(q)
+    assert s.feasible
+    assert validate_schedule(q, s) == []
+    inp = make_inputs(q, seed)
+    got, want = timed_exec(q, s, inp), sequential_exec(q, inp)
+    for k in want:
+        np.testing.assert_allclose(got[k], want[k], rtol=1e-12, err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# Fusion legality
+# ---------------------------------------------------------------------------
+
+
+def _chain(n, consumer_offset):
+    """Producer writes X[i][j]; consumer (same bounds) reads
+    X[i + consumer_offset][j]."""
+    b = ProgramBuilder("chain")
+    b.array("inp", (n + 1, n), is_arg=True, partition=(0, 1), ports=("w", "r"))
+    b.array("X", (n + 1, n), partition=(0, 1), ports=("w", "r"))
+    b.array("out", (n, n), is_arg=True, partition=(0, 1), ports=("w", "r"))
+    with b.loop("pi", 0, n) as i:
+        with b.loop("pj", 0, n) as j:
+            b.store("X", b.mul(b.load("inp", i, j), b.const(2.0)), i, j)
+    with b.loop("ci", 0, n) as i:
+        with b.loop("cj", 0, n) as j:
+            b.store("out", b.mul(b.load("X", i + consumer_offset, j),
+                                 b.const(0.5)), i, j)
+    return b.build()
+
+
+def test_fusion_legal_pointwise():
+    p = _chain(6, 0)
+    q = FuseProducerConsumer().apply(p)
+    assert len(q.body) == 1  # fused
+    differential_check(p, q, seeds=(0, 1, 2))
+
+
+def test_fusion_illegal_forward_read_is_rejected():
+    """Consumer reads a row the producer has not written yet at the fused
+    iteration: the exact ILP legality check must refuse to fuse."""
+    p = _chain(6, 1)
+    q = FuseProducerConsumer().apply(p)
+    assert q is p  # unchanged: fusion would reverse a RAW dependence
+    # and the WAR direction: the second nest writes X[i+1][j], which the
+    # first nest still has to read (as X[i][j]) at a LATER iteration — the
+    # fused second nest would clobber it one iteration too early
+    b = ProgramBuilder("war")
+    b.array("X", (7, 6), partition=(0, 1), ports=("w", "r"))
+    b.array("Y", (6, 6), partition=(0, 1), ports=("w", "r"))
+    with b.loop("pi", 0, 6) as i:
+        with b.loop("pj", 0, 6) as j:
+            b.store("Y", b.mul(b.load("X", i, j), b.const(2.0)), i, j)
+    with b.loop("ci", 0, 6) as i:
+        with b.loop("cj", 0, 6) as j:
+            b.store("X", b.mul(b.load("Y", i, j), b.const(0.5)), i + 1, j)
+    p2 = b.build()
+    q2 = FuseProducerConsumer().apply(p2)
+    assert q2 is p2
+    differential_check(p2, q2)
+
+
+def test_fusion_crossed_iv_names():
+    """Consumer loops named like the producer's but CROSSED (its outer iv
+    carries the producer's inner name): the B->A renaming must be applied
+    simultaneously, or j->i->j chains and the fused body reads M[j][j]."""
+    n = 6
+    b = ProgramBuilder("crossed")
+    b.array("inp", (n, n), is_arg=True, partition=(0, 1), ports=("w", "r"))
+    b.array("M", (n, n), partition=(0, 1), ports=("w", "r"))
+    b.array("O", (n, n), is_arg=True, partition=(0, 1), ports=("w", "r"))
+    with b.loop("i", 0, n) as i:
+        with b.loop("j", 0, n) as j:
+            b.store("M", b.mul(b.load("inp", i, j), b.const(2.0)), i, j)
+    with b.loop("j", 0, n) as j:     # reads M[j][i]: pointwise after the
+        with b.loop("i", 0, n) as i:  # positional renaming j->i, i->j
+            b.store("O", b.mul(b.load("M", j, i), b.const(0.5)), j, i)
+    p = b.build()
+    q = PassManager([FuseProducerConsumer()], verify=True).run(p)
+    assert len(q.body) == 1
+    differential_check(p, q, seeds=(0, 1, 2))
+
+
+def test_fusion_collapses_pointwise_chain():
+    """unsharp's by->sharpen->mask tail is pointwise: greedy fusion must
+    collapse it (4 nests -> 2) and the fused program must still schedule."""
+    p = _small("unsharp")
+    q = FuseProducerConsumer().apply(p)
+    assert len(q.body) == 2
+    s = compile_program(q)
+    assert s.feasible
+    differential_check(p, q)
+
+
+# ---------------------------------------------------------------------------
+# Pass mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_unroll_divisibility_noop():
+    p = _small("unsharp")  # trips are 8/10: factor 3 divides nothing
+    assert LoopUnroll(3).apply(p) is p
+
+
+def test_transforms_do_not_mutate_input():
+    p = _small("dus")
+
+    def fingerprint(pr: Program) -> str:  # deep textual snapshot
+        return repr([(type(n).__name__, vars(n)) for n, _ in pr.walk()]) + \
+            repr(sorted(pr.arrays.items()))
+
+    snapshot = fingerprint(p)
+    for T in _transform_menu(p):
+        T.apply(p)
+    assert fingerprint(p) == snapshot
+
+
+def test_pass_manager_verify_catches_bad_pass():
+    class DropLastStore(Pass):
+        name = "drop_last_store"
+
+        def apply(self, p):
+            from repro.core.transforms import clone_program
+            q = clone_program(p)
+            inner = q.body[-1]
+            while any(isinstance(ch, Loop) for ch in inner.body):
+                inner = [ch for ch in inner.body if isinstance(ch, Loop)][-1]
+            inner.body = [op for op in inner.body
+                          if not isinstance(op, StoreOp)]
+            return q
+
+    p = _small("unsharp")
+    with pytest.raises(PassVerificationError, match="drop_last_store"):
+        PassManager([DropLastStore()], verify=True).run(p)
+
+
+def test_to_spsc_alias_preserved():
+    """dataflow.to_spsc must remain the transforms implementation."""
+    from repro.core import dataflow
+    assert dataflow.to_spsc is to_spsc
+    p = _small("unsharp")
+    q = ToSPSC().apply(p)
+    info = dataflow.analyze_dataflow(q)
+    assert info.applicable
+
+
+def test_dataflow_rejects_multi_chain_task():
+    """A fused (two-sibling-nest) task has no single FIFO access order: the
+    dataflow model must say so instead of silently misclassifying."""
+    from repro.core.dataflow import analyze_dataflow
+    b = ProgramBuilder("multi_chain")
+    b.array("A", (4, 4), partition=(0,), ports=("w", "r"))
+    b.array("B", (4, 4), partition=(0,), ports=("w", "r"))
+    with b.loop("ti", 0, 4) as i:
+        with b.loop("ta", 0, 4) as j:
+            b.store("A", b.mul(b.load("A", i, j), b.const(1.0)), i, j)
+        with b.loop("tb", 0, 4) as j:
+            b.store("B", b.mul(b.load("A", i, j), b.const(1.0)), i, j)
+    with b.loop("ci", 0, 4) as i:
+        with b.loop("cj", 0, 4) as j:
+            b.store("B", b.mul(b.load("B", i, j), b.const(2.0)), i, j)
+    p = b.build()
+    info = analyze_dataflow(p)
+    assert not info.applicable
+    assert "multiple loop chains" in info.reason
