@@ -44,7 +44,10 @@ def run(emit):
     got = ops.stencil_pipeline(img, wx, wx, interpret=True)
     err = float(jnp.max(jnp.abs(got - ref.stencil_pipeline_ref(img, wx, wx))))
     rows.append(("kernel.stencil_pipeline.ref_us", us, f"maxerr={err:.1e}"))
-    rows.append(("kernel.stencil_pipeline.ilp_halo_rows", 0.0,
+    br, halo = ops.stencil_dse_config()
+    rows.append(("kernel.stencil_pipeline.dse_config", 0.0,
+                 f"block_rows={br};halo={halo}"))
+    rows.append(("kernel.stencil_pipeline.ilp_halo_rows_fallback", 0.0,
                  ops.ilp_halo_rows(3)))
     # wkv6
     B, H, S, hd = 1, 2, 128, 64

@@ -13,11 +13,18 @@ CACHE = os.path.join(RESULTS_DIR, "paper_results.json")
 # the transform/DSE win trajectory is visible across PRs.
 DSE_JSON = os.path.join(os.path.dirname(__file__), os.pardir, "BENCH_dse.json")
 
+# Fused-vs-unfused latency snapshot for the mismatched-bounds stencil
+# chains (shift-and-peel fusion), next to BENCH_dse.json for the same reason.
+FUSION_JSON = os.path.join(os.path.dirname(__file__), os.pardir,
+                           "BENCH_fusion.json")
+
 # Reduced benchmark sizes for the DSE sweep (explore() compiles ~a dozen
 # candidates per program and validates the winner with the brute-force
 # oracles, so full-size optical flow would take minutes on this container).
 _DSE_SIZES = {"unsharp": 16, "harris": 8, "dus": 16, "optical_flow": 8,
               "two_mm": 8}
+
+_FUSION_SIZES = {"blur_chain": 16, "conv_pool": 16, "gradient_harris": 12}
 
 
 def compute(storage: str = "reg", force: bool = False) -> dict:
@@ -102,6 +109,74 @@ def compute_dse(storage: str = "bram", force: bool = False) -> dict:
     cache[storage] = out
     json.dump(cache, open(DSE_JSON, "w"), indent=1)
     return out
+
+
+def compute_fusion(storage: str = "bram", force: bool = False) -> dict:
+    """Shift-and-peel fusion sweep over the mismatched-bounds stencil chains
+    (``programs.CHAIN_BENCHMARKS``): for every chain, compare the unfused
+    ``compile_program`` schedule against the best explore() candidate whose
+    pipeline actually fused the chain (nonzero shift / peels recorded in the
+    program's ``_fusion_log``).  Results go to ``BENCH_fusion.json``."""
+    cache = {}
+    if os.path.exists(FUSION_JSON):
+        cache = json.load(open(FUSION_JSON))
+    if storage in cache and not force:
+        return cache[storage]
+
+    from repro.core import explore
+    from repro.core.programs import CHAIN_BENCHMARKS
+
+    out = {}
+    for name, mk in CHAIN_BENCHMARKS.items():
+        n = _FUSION_SIZES.get(name, 8)
+        p = mk(n, storage=storage)
+        t0 = time.time()
+        r = explore(p, verify=True, validate=True, max_candidates=10,
+                    unroll_factors=(), tile_sizes=(4,))
+        fused = [c for c in r.candidates
+                 if getattr(c.program, "_fusion_log", [])]
+        if not fused:
+            raise RuntimeError(
+                f"fusion sweep: no fused candidate for chain '{name}' "
+                f"(n={n}, storage={storage}) — candidates: "
+                f"{[c.desc for c in r.candidates]}")
+        in_budget = [c for c in fused if c.within_budget]
+        best_fused = min(in_budget or fused, key=lambda c: c.latency)
+        log = best_fused.program._fusion_log
+        out[name] = {
+            "n": n,
+            "unfused_latency": r.baseline.latency,
+            "fused_latency": best_fused.latency,
+            "fused_pipeline": best_fused.desc,
+            "loop_only_latency":
+                r.baseline.schedule.sequential_nests_latency(),
+            "shift": log[0]["shift"],
+            "peels": sum(e["peels"] for e in log),
+            "speedup": round(r.baseline.latency / best_fused.latency, 3),
+            "within_budget": best_fused.within_budget,
+            "budget": r.budget,
+            "fused_resources": best_fused.res,
+            "baseline_resources": r.baseline.res,
+            "verified": True,   # explore(verify=True, validate=True) raised
+                                # on any differential/validator failure
+            "fusion_seconds": round(time.time() - t0, 2),
+        }
+    cache[storage] = out
+    json.dump(cache, open(FUSION_JSON, "w"), indent=1)
+    return cache[storage]
+
+
+def fusion_table(res: dict) -> list[tuple]:
+    """Fused-vs-unfused latency of the mismatched-bounds stencil chains."""
+    rows = []
+    for name, r in res.items():
+        rows.append((f"{name}.speedup", r["fusion_seconds"] * 1e6,
+                     r["speedup"]))
+        rows.append((f"{name}.fused_latency", 0.0, r["fused_latency"]))
+        rows.append((f"{name}.unfused_latency", 0.0, r["unfused_latency"]))
+        rows.append((f"{name}.shift", 0.0,
+                     "x".join(map(str, r["shift"]))))
+    return rows
 
 
 def dse_table(res: dict) -> list[tuple]:

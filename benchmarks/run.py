@@ -47,6 +47,15 @@ def main() -> None:
         res = paper.compute_dse(storage="bram", force=True)
         _emit([(f"dse.bram.{n}", us, d) for n, us, d in paper.dse_table(res)])
 
+    if only in (None, "fusion"):
+        print("# === shift-and-peel fusion — mismatched-bounds stencil chains, "
+              "fused vs unfused schedule (DESIGN.md §6) ===")
+        # always re-run: this section verifies every fused candidate
+        # differentially and the winner against the brute-force oracles
+        res = paper.compute_fusion(storage="bram", force=True)
+        _emit([(f"fusion.bram.{n}", us, d)
+               for n, us, d in paper.fusion_table(res)])
+
     if only in (None, "pipeline"):
         try:
             from benchmarks import pipeline_ilp_bench

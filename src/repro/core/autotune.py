@@ -242,7 +242,11 @@ def explore(p: Program, budget: Optional[dict[str, float]] = None, *,
     baseline.within_budget = _budget_key(baseline.res, budget)
 
     moves: list[tuple[str, Pass]] = [
+        # shift-and-peel fusion (mismatched bounds fuse too) plus the
+        # equal-bounds-only variant: peeling trades prologue nests for core
+        # overlap, which is not always the latency winner — enumerate both
         ("fuse", FuseProducerConsumer()),
+        ("fuse(noshift)", FuseProducerConsumer(enable_shift=False)),
         ("partition", ArrayPartition()),
     ]
     moves += [(f"unroll(x{f})", LoopUnroll(f))
@@ -285,7 +289,13 @@ def explore(p: Program, budget: Optional[dict[str, float]] = None, *,
     frontier = best_of(candidates)
     while compiles < max_candidates:
         base_descs = frontier.desc.split(" | ") if frontier.passes else []
-        for desc, mv in moves:
+        # tile moves are re-derived from the frontier program: fusion renames
+        # loops, so tiling the *fused* nest (the knob the Pallas kernel layer
+        # reads as its block size) is only reachable this way
+        level_moves = moves + [
+            (t.name, t) for t in _tile_moves(frontier.program, tile_sizes)
+            if t.name not in {d for d, _ in moves}]
+        for desc, mv in level_moves:
             if desc not in base_descs:
                 try_pipeline(base_descs + [desc], [mv],
                              base=frontier.program,

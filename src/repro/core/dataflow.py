@@ -272,20 +272,32 @@ def resources(p: Program, s: Schedule, mode: str) -> dict[str, float]:
             repl = max(1, -(-len(arr.ports) // 2))  # BRAM = 2 physical ports
             bram_bytes += bits / 8 * repl
 
-    # fp datapath units
+    # fp datapath units.  Loops peeled off a shift-and-peel fusion
+    # (``Loop.peel``) replicate a subrange of the fused core's body: in
+    # hardware they are the same guarded datapath (the IR just lacks
+    # conditionals), so their ops are not counted again.  Top-level nests of
+    # one fusion additionally share a ``fuse_group`` and are costed once at
+    # the group's widest member.
     per_nest_dsp = []
+    group_dsp: dict[int, float] = {}
     for item in p.body:
         cnt = 0
         def rec(items):
             nonlocal cnt
             for it in items:
                 if isinstance(it, Loop):
-                    rec(it.body)
+                    if not it.peel:
+                        rec(it.body)
                 elif isinstance(it, ArithOp):
                     cnt += _DSP.get(it.fn, 0)
-        if isinstance(item, Loop):
+        if isinstance(item, Loop) and not item.peel:
             rec(item.body)
-        per_nest_dsp.append(cnt)
+        g = item.fuse_group if isinstance(item, Loop) else None
+        if g is None:
+            per_nest_dsp.append(cnt)
+        else:
+            group_dsp[g] = max(group_dsp.get(g, 0), cnt)
+    per_nest_dsp.extend(group_dsp.values())
     dsp = max(per_nest_dsp, default=0) if mode == "vitis_seq" else sum(per_nest_dsp)
 
     # shift-register delays (ours and Vitis pay comparable pipeline registers;

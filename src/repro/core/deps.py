@@ -34,6 +34,7 @@ decided once at construction and never re-examined across autotuner probes.
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Optional
 
@@ -345,6 +346,40 @@ class _Pair:
     loop_uids: tuple[int, ...]  # IIs the slack actually depends on
 
 
+# ---------------------------------------------------------------------------
+# Cross-candidate sharing of the data-dependence half of pair enumeration.
+#
+# DSE candidates that differ only in array METADATA (partition moves, port
+# rewrites) have identical iteration spaces and access functions, so their
+# RAW/WAR/WAW pair rows and happens-before case feasibility are identical —
+# only the PORT pseudo-dependences (whose address rows are restricted to the
+# partitioned dims) change.  ``clone_program`` preserves op/loop uids, so
+# the shared results are keyed on an iteration-space fingerprint and looked
+# up per (src uid, snk uid, kind).
+# ---------------------------------------------------------------------------
+
+DATA_PAIR_ENUM_RUNS = 0   # full (uncached) data-pair enumerations (test probe)
+_DATA_PAIR_CACHE: "OrderedDict[str, dict]" = OrderedDict()
+_DATA_PAIR_CACHE_MAX = 64
+
+
+def iteration_space_key(p: Program) -> str:
+    """Fingerprint of everything the data-dependence pairs depend on: loop
+    structure/bounds, access functions, program order (walk order), op uids
+    (the cache's lookup keys) and access latencies — NOT array partition,
+    ports or storage kind (pure metadata for RAW/WAR/WAW)."""
+    parts = []
+    for node, _ in p.walk():
+        if isinstance(node, Loop):
+            parts.append(f"L{node.uid}:{node.ivname}:{node.lb}:{node.ub}")
+        elif isinstance(node, (LoadOp, StoreOp)):
+            arr = p.arrays[node.array]
+            tag = "S" if isinstance(node, StoreOp) else "R"
+            parts.append(f"{tag}{node.uid}:{node.array}:{node.index!r}:"
+                         f"{arr.wr_latency}:{arr.rd_latency}")
+    return "|".join(parts)
+
+
 class DepAnalysis:
     """Memory-dependence analysis, incremental across autotuner II probes.
 
@@ -418,10 +453,25 @@ class DepAnalysis:
         return cases
 
     def _enumerate_pairs(self) -> list[_Pair]:
+        global DATA_PAIR_ENUM_RUNS
         pairs = []
         by_array: dict[str, list[Access]] = {}
         for a in self.accesses:
             by_array.setdefault(a.op.array, []).append(a)
+
+        # data-dependence rows/cases are metadata-independent: share them
+        # across candidates with the same iteration-space fingerprint
+        key = iteration_space_key(self.p)
+        shared = _DATA_PAIR_CACHE.get(key)
+        if shared is None:
+            DATA_PAIR_ENUM_RUNS += 1
+            shared = {}
+            _DATA_PAIR_CACHE[key] = shared
+            while len(_DATA_PAIR_CACHE) > _DATA_PAIR_CACHE_MAX:
+                _DATA_PAIR_CACHE.popitem(last=False)
+        else:
+            _DATA_PAIR_CACHE.move_to_end(key)
+
         for name, accs in by_array.items():
             arr = self.p.arrays[name]
             # ---- real data dependences -------------------------------
@@ -435,8 +485,17 @@ class DepAnalysis:
                         kind, delay = "WAR", 1
                     else:
                         kind, delay = "WAW", 1
-                    self._add_pair(pairs, X, Y, kind, delay, name, None)
-            # ---- port pseudo-dependences ------------------------------
+                    ckey = (X.uid, Y.uid, kind)
+                    entry = shared.get(ckey)
+                    if entry is None:
+                        rows = self._address_rows(X, Y, None)
+                        entry = (rows, self._feasible_cases(X, Y, rows))
+                        shared[ckey] = entry
+                    rows, cases = entry
+                    if cases:
+                        self._append_pair(pairs, X, Y, kind, delay, name,
+                                          rows, cases)
+            # ---- port pseudo-dependences (metadata-dependent: fresh) ---
             if arr.kind == "reg":
                 continue
             by_port: dict[int, list[Access]] = {}
@@ -446,14 +505,14 @@ class DepAnalysis:
             for port, paccs in by_port.items():
                 for X in paccs:
                     for Y in paccs:
-                        self._add_pair(pairs, X, Y, "PORT", 1, name, part)
+                        rows = self._address_rows(X, Y, part)
+                        cases = self._feasible_cases(X, Y, rows)
+                        if cases:
+                            self._append_pair(pairs, X, Y, "PORT", 1, name,
+                                              rows, cases)
         return pairs
 
-    def _add_pair(self, pairs, X, Y, kind, delay, name, eq_dims):
-        rows = self._address_rows(X, Y, eq_dims)
-        cases = self._feasible_cases(X, Y, rows)
-        if not cases:
-            return
+    def _append_pair(self, pairs, X, Y, kind, delay, name, rows, cases):
         uids = tuple(dict.fromkeys(
             [l.uid for l in X.ancestors] + [l.uid for l in Y.ancestors]))
         pairs.append(_Pair(X=X, Y=Y, kind=kind, delay=delay, array=name,

@@ -178,6 +178,13 @@ class Loop:
     pipeline: bool = True
     ii: Optional[int] = None  # target II (pragma); None -> autotuned
     unroll: bool = False
+    # Top-level nests emitted by one shift-and-peel fusion share a group id:
+    # the peel nests are the SAME guarded datapath as the fused core (the IR
+    # just lacks conditionals), so the resource model costs the group once.
+    fuse_group: Optional[int] = None
+    # True for prologue/epilogue loops peeled off a shifted fusion — their
+    # ops replicate (a subrange of) the fused core's and run on its datapath.
+    peel: bool = False
     uid: int = field(default_factory=lambda: next(_uid))
 
     @property

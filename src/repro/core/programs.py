@@ -269,10 +269,96 @@ def two_mm(m: int = 8, storage: str = "reg") -> Program:
     return b.build()
 
 
+# ---------------------------------------------------------------------------
+# Mismatched-bounds producer-consumer chains (shift-and-peel fusion targets).
+#
+# Each is a two-nest chain whose consumer nest has strictly smaller (or
+# stride-scaled) bounds than its producer, so equal-bounds fusion cannot
+# apply — the shapes the paper's Fig. 1-3 motivating example is made of.
+# ---------------------------------------------------------------------------
+
+
+def blur_chain(n: int = 32, storage: str = "reg", taps: int = 3) -> Program:
+    """blur-x -> blur-y (the paper's motivating stencil chain): the producer
+    covers ``n + taps - 1`` rows, the consumer ``n`` — fusing needs a
+    consumer shift of ``taps - 1`` rows and a peeled prologue."""
+    b = ProgramBuilder("blur_chain")
+    m = n + taps - 1
+    w = [1.0 / (2 ** abs(t - (taps - 1) // 2) + 1) for t in range(taps)]
+    b.array("img", (m, m), is_arg=True, **_PRESETS[storage])
+    b.array("bx", (m, n), **_PRESETS[storage])
+    b.array("by", (n, n), is_arg=True, **_PRESETS[storage])
+    with b.loop("bxi", 0, m) as i:
+        with b.loop("bxj", 0, n) as j:
+            t = [b.mul(b.load("img", i, j + v), b.const(w[v]))
+                 for v in range(taps)]
+            b.store("bx", b.sum_tree(t), i, j)
+    with b.loop("byi", 0, n) as i:
+        with b.loop("byj", 0, n) as j:
+            t = [b.mul(b.load("bx", i + u, j), b.const(w[u]))
+                 for u in range(taps)]
+            b.store("by", b.sum_tree(t), i, j)
+    return b.build()
+
+
+def conv_pool(n: int = 32, storage: str = "reg") -> Program:
+    """3x3 conv then 2x2 max-pool (stride 2): the consumer runs at HALF the
+    producer's rate (index coefficient 2), so the legal shift is n/2 and the
+    fused core interleaves one pool row per conv row."""
+    assert n % 2 == 0, n
+    h = n // 2
+    b = ProgramBuilder("conv_pool")
+    b.array("img", (n + 2, n + 2), is_arg=True, **_PRESETS[storage])
+    b.array("conv", (n, n), **_PRESETS[storage])
+    b.array("pool", (h, h), is_arg=True, **_PRESETS[storage])
+    _stencil3x3(b, "cv", "conv", ["img"], _GAUSS, n, n)
+    with b.loop("pli", 0, h) as i:
+        with b.loop("plj", 0, h) as j:
+            vals = [b.load("conv", i * 2 + u, j * 2 + v)
+                    for u in range(2) for v in range(2)]
+            m = vals[0]
+            for v in vals[1:]:
+                m = b.arith("max", m, v)
+            b.store("pool", m, i, j)
+    return b.build()
+
+
+def gradient_harris(n: int = 32, storage: str = "reg") -> Program:
+    """Gradient field then a 3x3-window Harris-style response: the gradient
+    nest covers ``(n+2)^2``, the response ``n^2`` — a two-level shift of
+    (2, 2) with peeled prologues at both levels."""
+    b = ProgramBuilder("gradient_harris")
+    b.array("img", (n + 4, n + 4), is_arg=True, **_PRESETS[storage])
+    b.array("G", (n + 2, n + 2), **_PRESETS[storage])
+    b.array("R", (n, n), is_arg=True, **_PRESETS[storage])
+    with b.loop("gi", 0, n + 2) as i:
+        with b.loop("gj", 0, n + 2) as j:
+            gx = b.sub(b.load("img", i + 1, j + 2), b.load("img", i + 1, j))
+            gy = b.sub(b.load("img", i + 2, j + 1), b.load("img", i, j + 1))
+            b.store("G", b.mul(b.add(gx, gy), b.const(0.5)), i, j)
+    with b.loop("ri", 0, n) as i:
+        with b.loop("rj", 0, n) as j:
+            terms = [b.load("G", i + u, j + v)
+                     for u in range(3) for v in range(3)]
+            s = b.sum_tree(terms)
+            q = b.sum_tree([b.mul(t, t) for t in terms])
+            b.store("R", b.sub(q, b.mul(b.mul(s, s), b.const(0.04))), i, j)
+    return b.build()
+
+
 BENCHMARKS = {
     "unsharp": unsharp,
     "harris": harris,
     "dus": dus,
     "optical_flow": optical_flow,
     "two_mm": two_mm,
+}
+
+# Mismatched-bounds stencil chains: the shift-and-peel fusion benchmark set
+# (kept out of BENCHMARKS so the paper-figure tables stay comparable across
+# PRs; benchmarks/run.py records them in BENCH_fusion.json).
+CHAIN_BENCHMARKS = {
+    "blur_chain": blur_chain,
+    "conv_pool": conv_pool,
+    "gradient_harris": gradient_harris,
 }

@@ -31,9 +31,13 @@ Transforms:
   * ``ArrayPartition(dims)``  — rewrite ``ArrayDecl.partition``/``ports`` so
                                 the scheduler's port pseudo-dependences see
                                 banked parallelism.  Pure metadata.
-  * ``FuseProducerConsumer``  — merge adjacent top-level nests with equal
-                                bounds when an exact ILP legality check
-                                proves no dependence is reversed.
+  * ``FuseProducerConsumer``  — merge adjacent top-level nests when an
+                                exact ILP legality check proves no
+                                dependence is reversed; mismatched bounds
+                                fuse by SHIFTING the consumer by the
+                                per-level max dependence distance and
+                                PEELING the iterations outside the shifted
+                                intersection (DESIGN.md §6 shift-and-peel).
   * ``ToSPSC``                — the paper's §5.2 benchmark transformation
                                 (migrated here from ``dataflow.py``).
 """
@@ -325,7 +329,8 @@ class LoopUnroll(Pass):
                         ssa: dict[str, str] = {}
                         body.extend(_clone_body(it.body, sub, ssa, namer))
                     nl = Loop(ivname=it.ivname, lb=0, ub=it.trip // f,
-                              pipeline=it.pipeline, ii=None)
+                              pipeline=it.pipeline, ii=None,
+                              fuse_group=it.fuse_group, peel=it.peel)
                     nl.body = body
                     out.append(nl)
                 else:
@@ -382,7 +387,8 @@ class LoopTile(Pass):
                                  ii=it.ii)
                     inner.body = it.body
                     outer = Loop(ivname=ot, lb=0, ub=it.trip // s,
-                                 pipeline=it.pipeline, ii=None)
+                                 pipeline=it.pipeline, ii=None,
+                                 fuse_group=it.fuse_group, peel=it.peel)
                     outer.body = [inner]
                     out.append(outer)
                 else:
@@ -472,20 +478,24 @@ def _mem_ops_of(items) -> list:
     return out
 
 
-def _fusion_hazard(opA, opB, loopsA: list[Loop], loopsB: list[Loop]) -> bool:
+def _fusion_hazard(opA, opB, loopsA: list[Loop], loopsB: list[Loop],
+                   shift: Optional[Sequence[int]] = None) -> bool:
     """Exact legality core.  ``opA`` (from the first nest) and ``opB`` (from
     the second) touch the same array and at least one writes.  In the
     original program every dynamic instance of ``opA`` precedes every
-    instance of ``opB``; after fusion instance order is lexicographic in the
-    shared iteration vector with A's body first.  The fusion is illegal iff
+    instance of ``opB``; after fusion (with the consumer shifted by
+    ``shift``, default zero) instance ``va`` of A executes at fused position
+    ``va`` and instance ``vb`` of B at ``vb + shift``, A's body first at
+    ties.  The fusion is illegal iff
 
-        exists va, vb :  addr_A(va) == addr_B(vb)  and  va >lex vb
+        exists va, vb :  addr_A(va) == addr_B(vb)  and  va >lex vb + shift
 
-    (at va == vb A still precedes B inside the fused body).  Decided exactly
-    with one small feasibility ILP per lexicographic carry level.
+    Decided exactly with one small feasibility ILP per lexicographic carry
+    level.
     """
     d = len(loopsA)
     n = 2 * d
+    sh = [0] * d if shift is None else list(shift)
     col_a = {l.ivname: i for i, l in enumerate(loopsA)}
     col_b = {l.ivname: d + i for i, l in enumerate(loopsB)}
 
@@ -504,17 +514,17 @@ def _fusion_hazard(opA, opB, loopsA: list[Loop], loopsB: list[Loop]) -> bool:
              [(l.lb, l.ub - 1) for l in loopsB]
     c = np.zeros(n)
 
-    for lvl in range(d):  # va >lex vb carried at level lvl
+    for lvl in range(d):  # va >lex vb + shift carried at level lvl
         A_eq = list(A_eq_addr)
         b_eq = list(b_eq_addr)
         for k in range(lvl):
             row = np.zeros(n)
             row[k], row[d + k] = 1.0, -1.0
             A_eq.append(row)
-            b_eq.append(0.0)
-        row = np.zeros(n)  # vb_lvl - va_lvl <= -1
+            b_eq.append(float(sh[k]))  # va_k == vb_k + shift_k
+        row = np.zeros(n)  # (vb_lvl + shift_lvl) - va_lvl <= -1
         row[d + lvl], row[lvl] = 1.0, -1.0
-        res = solve_ilp(c, np.asarray([row]), np.asarray([-1.0]),
+        res = solve_ilp(c, np.asarray([row]), np.asarray([-1.0 - sh[lvl]]),
                         np.asarray(A_eq), np.asarray(b_eq), bounds=bounds)
         if res.ok:
             return True
@@ -525,50 +535,167 @@ def _fusion_hazard(opA, opB, loopsA: list[Loop], loopsB: list[Loop]) -> bool:
     return False
 
 
+def _max_dep_distance(opA, opB, loopsA: list[Loop], loopsB: list[Loop],
+                      level: int) -> Optional[int]:
+    """max(va[level] - vb[level]) over address-matching instance pairs of
+    ``opA``/``opB`` — the per-level dependence distance that a legal
+    consumer shift must cover.  Returns None when the accesses never alias
+    (no constraint).  Solved closed-form via the deps.py separable solver
+    whenever the address system decomposes; genuinely coupled systems fall
+    back to the branch-and-bound ILP.  Raises TransformError when neither
+    resolves.
+    """
+    from .deps import _FALLBACK as _SEP_FALLBACK, _solve_separable
+
+    nx, ny = len(loopsA), len(loopsB)
+    # minimize -(va_level - vb_level)  ==  maximize the distance
+    vars: dict = {}
+    for i, l in enumerate(loopsA):
+        vars[("x", i)] = (l.lb, l.ub - 1, -1 if i == level else 0)
+    for j, l in enumerate(loopsB):
+        vars[("y", j)] = (l.lb, l.ub - 1, 1 if j == level else 0)
+    col_a = {l.ivname: ("x", i) for i, l in enumerate(loopsA)}
+    col_b = {l.ivname: ("y", j) for j, l in enumerate(loopsB)}
+    rows = []
+    for dim in range(len(opA.index)):
+        ea, eb = opA.index[dim], opB.index[dim]
+        coeffs: dict = {}
+        for nm, c in ea.coeffs.items():
+            k = col_a[nm]
+            coeffs[k] = coeffs.get(k, 0) + c
+        for nm, c in eb.coeffs.items():
+            k = col_b[nm]
+            coeffs[k] = coeffs.get(k, 0) - c
+        rows.append(({k: v for k, v in coeffs.items() if v},
+                     eb.const - ea.const))
+    r = _solve_separable(vars, rows)
+    if r is None:
+        return None
+    if r is not _SEP_FALLBACK:
+        return -r
+
+    # coupled system: exact branch-and-bound fallback
+    n = nx + ny
+    c = np.zeros(n)
+    c[level] = -1.0
+    c[nx + level] = 1.0
+    A_eq, b_eq = [], []
+    for coeffs, rhs in rows:
+        row = np.zeros(n)
+        for (side, k), v in coeffs.items():
+            row[k if side == "x" else nx + k] = v
+        A_eq.append(row)
+        b_eq.append(float(rhs))
+    bounds = [(l.lb, l.ub - 1) for l in loopsA] + \
+             [(l.lb, l.ub - 1) for l in loopsB]
+    res = solve_ilp(c, None, None, np.asarray(A_eq), np.asarray(b_eq),
+                    bounds=bounds)
+    if res.ok:
+        return int(round(-res.fun))
+    if res.status == "infeasible":
+        return None
+    raise TransformError(
+        f"dependence-distance ILP unresolved ({res.status}) for "
+        f"{opA!r} / {opB!r}")
+
+
+_FUSE_GROUP_IDS = itertools.count(1)
+
+
 class FuseProducerConsumer(Pass):
-    """Fuse adjacent top-level producer/consumer nests.
+    """Fuse adjacent top-level producer/consumer nests, shifting and peeling
+    the consumer when the bounds do not match (DESIGN.md §6).
 
     Candidates: two adjacent top-level *perfect* nests with identical depth
-    and bounds where the first writes an array the second reads.  Legality
-    is decided exactly (``_fusion_hazard``): for every access pair on a
-    shared array with at least one write, no dynamic dependence may be
-    reversed by fusing.  The pass fuses greedily until a fixpoint, so a
-    pointwise chain (e.g. unsharp's sharpen+mask) collapses into one nest
-    the scheduler can pipeline with a single II.
+    where the first writes an array the second reads.  Legality is decided
+    exactly (``_fusion_hazard``): for every access pair on a shared array
+    with at least one write, no dynamic dependence may be reversed by
+    fusing.  When the zero-shift fusion is illegal or the bounds differ,
+    the pass computes the minimum componentwise-legal consumer shift — per
+    level, the maximum dependence distance ``max(va_l - vb_l)`` over all
+    conflicting pairs (``_max_dep_distance``, closed form via the deps.py
+    separable solver) — peels the iterations falling outside the shifted
+    intersection of bounds into prologue/epilogue nests, and emits the
+    fused core over the intersection.  Fusions whose core would cover less
+    than ``min_core_fraction`` of the smaller nest at any level (e.g. a
+    dependence distance growing with the problem size — no finite shift)
+    are refused.  The pass fuses greedily until a fixpoint, so a pointwise
+    chain (e.g. unsharp's sharpen+mask) collapses into one nest the
+    scheduler can pipeline with a single II.
     """
 
-    name = "fuse"
-
-    def __init__(self, max_fusions: Optional[int] = None):
+    def __init__(self, max_fusions: Optional[int] = None, *,
+                 enable_shift: bool = True,
+                 min_core_fraction: float = 0.5):
         self.max_fusions = max_fusions
+        self.enable_shift = enable_shift
+        self.min_core_fraction = min_core_fraction
+        self.name = "fuse" if enable_shift else "fuse(noshift)"
 
     # -- candidate test -----------------------------------------------------
-    def _fusable(self, p: Program, a, b) -> bool:
+    def _candidate(self, a, b):
+        """(loopsA, loopsB, conflicting pairs) or None (not producer/consumer
+        perfect nests of equal depth)."""
         ca, cb = _perfect_chain(a), _perfect_chain(b)
         if ca is None or cb is None:
-            return False
+            return None
         loopsA, _ = ca
         loopsB, _ = cb
         if len(loopsA) != len(loopsB):
-            return False
-        if any((x.lb, x.ub) != (y.lb, y.ub) for x, y in zip(loopsA, loopsB)):
-            return False
+            return None
         opsA, opsB = _mem_ops_of([a]), _mem_ops_of([b])
         wrote = {op.array for op in opsA if isinstance(op, StoreOp)}
         read_b = {op.array for op in opsB if isinstance(op, LoadOp)}
         if not (wrote & read_b):
-            return False  # not a producer/consumer pair
-        for opA in opsA:
-            for opB in opsB:
-                if opA.array != opB.array:
-                    continue
-                if not (isinstance(opA, StoreOp) or isinstance(opB, StoreOp)):
-                    continue
-                if _fusion_hazard(opA, opB, loopsA, loopsB):
-                    return False
+            return None  # not a producer/consumer pair
+        pairs = [(oa, ob) for oa in opsA for ob in opsB
+                 if oa.array == ob.array and
+                 (isinstance(oa, StoreOp) or isinstance(ob, StoreOp))]
+        return loopsA, loopsB, pairs
+
+    def _shift_for(self, loopsA, loopsB, pairs) -> Optional[list[int]]:
+        """The minimum legal (componentwise, nonnegative) consumer shift, or
+        None when fusion stays illegal / undecidable."""
+        d = len(loopsA)
+        try:
+            if not any(_fusion_hazard(oa, ob, loopsA, loopsB)
+                       for oa, ob in pairs):
+                return [0] * d  # zero shift already legal (exact, handles
+                # correlated distances the per-level maxima would overshoot)
+            if not self.enable_shift:
+                return None
+            shift = [0] * d
+            for oa, ob in pairs:
+                for lvl in range(d):
+                    dist = _max_dep_distance(oa, ob, loopsA, loopsB, lvl)
+                    if dist is not None:
+                        shift[lvl] = max(shift[lvl], dist)
+            # the componentwise maxima bound every distance vector, hence
+            # bound it lexicographically — but re-verify exactly
+            if any(_fusion_hazard(oa, ob, loopsA, loopsB, shift)
+                   for oa, ob in pairs):
+                return None
+            return shift
+        except (TransformError, RuntimeError):
+            return None  # undecided legality: never fuse on a guess
+
+    def _profitable(self, loopsA, loopsB, shift) -> bool:
+        """Refuse degenerate fusions: the shifted intersection (the fused
+        core) must cover >= min_core_fraction of the smaller nest at every
+        level — a shift that eats the whole iteration space (a dependence
+        distance scaling with the bounds, i.e. backward-flowing) fails."""
+        for la, lb_, s in zip(loopsA, loopsB, shift):
+            lo = max(la.lb, lb_.lb + s)
+            hi = min(la.ub, lb_.ub + s)
+            if hi - lo < 1:
+                return False
+            if hi - lo < self.min_core_fraction * min(la.trip, lb_.trip):
+                return False
         return True
 
+    # -- construction -------------------------------------------------------
     def _fuse(self, a: Loop, b: Loop, namer: _Namer) -> Loop:
+        """Zero-shift, equal-bounds fusion: splice B's body into A's."""
         loopsA, bodyA = _perfect_chain(a)
         loopsB, bodyB = _perfect_chain(b)
         # the B->A iv renaming must be SIMULTANEOUS: with crossed names
@@ -582,23 +709,123 @@ class FuseProducerConsumer(Pass):
         bodyA.extend(cloned)
         return a
 
+    def _peel(self, loops, level, lo, hi, sub, namer, peels) -> Loop:
+        """Clone loops[level:] with the level loop restricted to [lo, hi),
+        rebased to start at 0 (the scheduler's latency accounting assumes
+        lb == 0)."""
+        src = loops[level]
+        piv = namer(src.ivname)
+        lp = Loop(ivname=piv, lb=0, ub=hi - lo, pipeline=src.pipeline,
+                  ii=src.ii, peel=True)
+        s2 = dict(sub)
+        s2[src.ivname] = aff(piv) + lo
+        lp.body = _clone_body(src.body, s2, {}, namer)
+        peels.append(lp)
+        return lp
+
+    def _build(self, loopsA, loopsB, shift, level, subA, subB, namer, peels):
+        """Emit the fused region for levels >= ``level``: head peels (the
+        iterations before the shifted intersection), the fused core over the
+        intersection, then tail peels — recursively per level, so inner-level
+        bound mismatches peel *inside* the core loop's body."""
+        d = len(loopsA)
+        if level == d:
+            return _clone_body(loopsA[-1].body, subA, {}, namer) + \
+                _clone_body(loopsB[-1].body, subB, {}, namer)
+        la, lb_ = loopsA[level], loopsB[level]
+        s = shift[level]
+        lo = max(la.lb, lb_.lb + s)
+        hi = min(la.ub, lb_.ub + s)
+        assert hi > lo, "empty core must be rejected by _profitable"
+        out = []
+        if la.lb < lo:        # A-only head (consumer shifted right)
+            out.append(self._peel(loopsA, level, la.lb, lo, subA, namer,
+                                  peels))
+        if lb_.lb + s < lo:   # B-only head (negative shift; defensive)
+            out.append(self._peel(loopsB, level, lb_.lb, lo - s, subB, namer,
+                                  peels))
+        civ = namer(la.ivname)
+        core = Loop(ivname=civ, lb=0, ub=hi - lo,
+                    pipeline=la.pipeline and lb_.pipeline)
+        sA = dict(subA)
+        sA[la.ivname] = aff(civ) + lo
+        sB = dict(subB)
+        sB[lb_.ivname] = aff(civ) + (lo - s)
+        core.body = self._build(loopsA, loopsB, shift, level + 1, sA, sB,
+                                namer, peels)
+        out.append(core)
+        if hi < la.ub:        # A-only tail (producer ranges further)
+            out.append(self._peel(loopsA, level, hi, la.ub, subA, namer,
+                                  peels))
+        if hi - s < lb_.ub:   # B-only tail (shifted consumer ranges further)
+            out.append(self._peel(loopsB, level, hi - s, lb_.ub, subB, namer,
+                                  peels))
+        return out
+
     def apply(self, p: Program) -> Program:
         q = clone_program(p)
         namer = _Namer("f")
         fused = 0
         changed = True
         any_change = False
+        peeled: set[int] = set()   # uids of peel nests: never re-fused
+        log: list[dict] = list(getattr(q, "_fusion_log", []))
         while changed and (self.max_fusions is None or fused < self.max_fusions):
             changed = False
             for i in range(len(q.body) - 1):
                 a, b = q.body[i], q.body[i + 1]
-                if isinstance(a, Loop) and isinstance(b, Loop) and \
-                        self._fusable(q, a, b):
+                if not (isinstance(a, Loop) and isinstance(b, Loop)):
+                    continue
+                if a.uid in peeled or b.uid in peeled:
+                    continue
+                cand = self._candidate(a, b)
+                if cand is None:
+                    continue
+                loopsA, loopsB, pairs = cand
+                shift = self._shift_for(loopsA, loopsB, pairs)
+                if shift is None:
+                    continue
+                arrays = sorted({oa.array for oa, _ in pairs})
+                equal_bounds = all((x.lb, x.ub) == (y.lb, y.ub)
+                                   for x, y in zip(loopsA, loopsB))
+                old_groups = {g for g in (a.fuse_group, b.fuse_group)
+                              if g is not None}
+                if equal_bounds and not any(shift):
                     q.body[i:i + 2] = [self._fuse(a, b, namer)]
-                    fused += 1
-                    changed = any_change = True
-                    break
-        return q if any_change else p
+                    new_items = [q.body[i]]
+                    n_peels = 0
+                else:
+                    if any(l.ii is not None for l in loopsA + loopsB):
+                        continue  # a merged nest would drop the II pragma
+                    if not self._profitable(loopsA, loopsB, shift):
+                        continue
+                    peels: list[Loop] = []
+                    new_items = self._build(loopsA, loopsB, shift, 0,
+                                            {}, {}, namer, peels)
+                    peeled.update(lp.uid for lp in peels)
+                    n_peels = len(peels)
+                    q.body[i:i + 2] = new_items
+                # peel nests share the fused core's datapath (resource model)
+                group = min(old_groups) if old_groups else \
+                    next(_FUSE_GROUP_IDS)
+                for it in new_items:
+                    it.fuse_group = group
+                for it in q.body:
+                    if isinstance(it, Loop) and it.fuse_group in old_groups:
+                        it.fuse_group = group
+                log.append({"arrays": arrays, "shift": list(shift),
+                            "peels": n_peels,
+                            "core_trips": [min(x.ub, y.ub + s) -
+                                           max(x.lb, y.lb + s)
+                                           for x, y, s in
+                                           zip(loopsA, loopsB, shift)]})
+                fused += 1
+                changed = any_change = True
+                break
+        if not any_change:
+            return p
+        q._fusion_log = log
+        return q
 
 
 # ---------------------------------------------------------------------------

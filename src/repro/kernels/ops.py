@@ -2,21 +2,23 @@
 
 ``interpret`` defaults to True on CPU (this container) and False on TPU, so
 the same call sites work in both environments.
+
+``stencil_pipeline`` (and its configuration helpers ``stencil_dse_config``
+and the fallback ``ilp_halo_rows``) are re-exported from
+``repro.kernels.stencil_pipeline`` — that module owns the single
+implementation; this one used to carry a diverging duplicate wrapper.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
-import jax.numpy as jnp
-
 from repro.kernels.flash_attention import flash_attention as _fa
-from repro.kernels.stencil_pipeline import stencil_pipeline as _sp
+from repro.kernels.stencil_pipeline import (default_interpret as
+                                            _default_interpret,
+                                            ilp_halo_rows, stencil_dse_config,
+                                            stencil_pipeline)
 from repro.kernels.wkv6 import wkv6 as _wkv
 
-
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+__all__ = ["flash_attention", "stencil_pipeline", "stencil_dse_config",
+           "ilp_halo_rows", "wkv6"]
 
 
 def flash_attention(q, k, v, *, causal=True, block_q=128, block_k=128,
@@ -26,59 +28,6 @@ def flash_attention(q, k, v, *, causal=True, block_q=128, block_k=128,
                interpret=interpret)
 
 
-def stencil_pipeline(img, wx, wy, *, block_rows=8, interpret=None):
-    interpret = _default_interpret() if interpret is None else interpret
-    return _sp(img, wx, wy, block_rows=block_rows, interpret=interpret)
-
-
 def wkv6(r, k, v, w, u, *, chunk=64, interpret=None):
     interpret = _default_interpret() if interpret is None else interpret
     return _wkv(r, k, v, w, u, chunk=chunk, interpret=interpret)
-
-
-@functools.lru_cache()
-def ilp_halo_rows(taps: int = 3) -> int:
-    """Derive the stencil_pipeline line-buffer halo from the paper's
-    memory-dependence ILP: schedule a two-nest conv chain and convert the
-    producer->consumer slack into rows (slack = -(halo rows) * II_row).
-
-    The two-nest chain is produced by the pass pipeline rather than built by
-    hand: the producer is written as raw accumulation + a pointwise scale
-    nest, and ``FuseProducerConsumer`` (with an exact ILP legality proof)
-    collapses them into the single producer nest whose RAW edges on ``mid``
-    carry the halo."""
-    from repro.core import compile_program
-    from repro.core.ir import ProgramBuilder
-    from repro.core.transforms import FuseProducerConsumer, Normalize, PassManager
-
-    n = 8
-    b = ProgramBuilder("halo_probe")
-    Hm = n + taps - 1
-    b.array("img", (n + 2 * (taps - 1), n), partition=(0, 1), ports=("w", "r"))
-    b.array("acc", (Hm, n), partition=(0, 1), ports=("w", "r"))
-    b.array("mid", (Hm, n), partition=(0, 1), ports=("w", "r"))
-    b.array("out", (n, n), partition=(0, 1), ports=("w", "r"))
-    # producer, unfused form: accumulate taps, then scale pointwise
-    with b.loop("pi", 0, Hm) as i:
-        with b.loop("pj", 0, n) as j:
-            t = [b.load("img", i + t_, j) for t_ in range(taps)]
-            b.store("acc", b.sum_tree(t), i, j)
-    with b.loop("si", 0, Hm) as i:
-        with b.loop("sj", 0, n) as j:
-            b.store("mid", b.mul(b.load("acc", i, j), b.const(1.0 / taps)), i, j)
-    # consumer conv over the fused producer's output
-    with b.loop("ci", 0, n) as i:
-        with b.loop("cj", 0, n) as j:
-            t = [b.mul(b.load("mid", i + t_, j), b.const(1.0 / taps))
-                 for t_ in range(taps)]
-            b.store("out", b.sum_tree(t), i, j)
-    p = PassManager([Normalize(), FuseProducerConsumer()], verify=True).run(b.build())
-    assert len(p.body) == 2, "accumulate+scale must fuse into the producer"
-    s = compile_program(p)
-    prod, _ = p.body
-    ii_row = s.iis[prod.uid]
-    # the RAW dependence edges on `mid` carry the slack: lower = delay - slack
-    # = wr_latency + halo_rows * II_row; the worst edge is the deepest tap.
-    worst = max(e.lower for e in s.edges
-                if e.kind == "RAW" and e.array == "mid")
-    return max(1, -(-(worst - 1) // ii_row))  # ceil

@@ -7,8 +7,17 @@ consumer may start once the producer has written ``halo`` rows.  On TPU the
 same slack *sizes the VMEM line buffer*: each grid step loads a row tile plus
 ``halo`` extra rows, computes the producer stage (conv-x) for the whole tile
 in VMEM, and immediately consumes it (conv-y) — the intermediate array never
-touches HBM.  ``ops.ilp_halo_rows()`` derives the halo by running the
-paper's memory-dependence ILP on the two-nest affine program.
+touches HBM.
+
+The block/halo configuration comes from a DSE sweep (``stencil_dse_config``):
+``autotune.explore`` shift-and-peel-fuses the mismatched-bounds blur chain
+(``programs.blur_chain``) and the winning fusion's row shift IS the halo; a
+winning tiling of the fused row loop sets ``block_rows``.  The older fixed
+probe (``ilp_halo_rows``) is kept only as the fallback when the sweep finds
+no shifted fusion.
+
+This module owns the single implementation; ``repro.kernels.ops`` re-exports
+it (they used to diverge on the ``interpret`` default).
 """
 from __future__ import annotations
 
@@ -17,6 +26,11 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode on CPU (this container), compiled on TPU."""
+    return jax.default_backend() != "tpu"
 
 
 def _kernel(img_ref, wx_ref, wy_ref, o_ref, *, block_rows, halo):
@@ -36,15 +50,10 @@ def _kernel(img_ref, wx_ref, wy_ref, o_ref, *, block_rows, halo):
     o_ref[...] = out.astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
-def stencil_pipeline(img, wx, wy, *, block_rows=8, interpret=False):
-    """img: (H, W); wx, wy: (3,).  Returns conv_y(conv_x(img)) of shape
-    (H-2, W-2), computed in one fused pass."""
+@functools.partial(jax.jit, static_argnames=("block_rows", "halo", "interpret"))
+def _stencil_call(img, wx, wy, *, block_rows, halo, interpret):
     H, W = img.shape
     Hout, Wout = H - 2, W - 2
-    halo = 2  # == ops.ilp_halo_rows(): ceil(-slack / II_row) for 3-tap chains
-    block_rows = min(block_rows, Hout)
-    assert Hout % block_rows == 0, (Hout, block_rows)
     return pl.pallas_call(
         functools.partial(_kernel, block_rows=block_rows, halo=halo),
         grid=(Hout // block_rows,),
@@ -57,3 +66,138 @@ def stencil_pipeline(img, wx, wy, *, block_rows=8, interpret=False):
         out_shape=jax.ShapeDtypeStruct((Hout, Wout), img.dtype),
         interpret=interpret,
     )(img, wx, wy)
+
+
+def stencil_pipeline(img, wx, wy, *, block_rows=None, halo=None,
+                     interpret=None):
+    """img: (H, W); wx, wy: (3,).  Returns conv_y(conv_x(img)) of shape
+    (H-2, W-2), computed in one fused pass.  ``block_rows``/``halo`` default
+    to the DSE-derived configuration (``stencil_dse_config``); ``interpret``
+    defaults to True off-TPU."""
+    interpret = default_interpret() if interpret is None else interpret
+    if block_rows is None or halo is None:
+        dse_rows, dse_halo = stencil_dse_config()
+        block_rows = dse_rows if block_rows is None else block_rows
+        halo = dse_halo if halo is None else halo
+    H, _ = img.shape
+    Hout = H - 2
+    block_rows = min(block_rows, Hout)
+    assert Hout % block_rows == 0, (Hout, block_rows)
+    return _stencil_call(img, wx, wy, block_rows=block_rows, halo=halo,
+                         interpret=interpret)
+
+
+@functools.lru_cache()
+def ilp_halo_rows(taps: int = 3) -> int:
+    """Fallback fixed probe (demoted: ``stencil_dse_config`` is the primary
+    source): derive the line-buffer halo from the paper's memory-dependence
+    ILP by scheduling a two-nest conv chain and converting the
+    producer->consumer slack into rows (slack = -(halo rows) * II_row).
+
+    The two-nest chain is produced by the pass pipeline rather than built by
+    hand: the producer is written as raw accumulation + a pointwise scale
+    nest, and ``FuseProducerConsumer`` (equal-bounds mode, with an exact ILP
+    legality proof) collapses them into the single producer nest whose RAW
+    edges on ``mid`` carry the halo."""
+    from repro.core import compile_program
+    from repro.core.ir import ProgramBuilder
+    from repro.core.transforms import (FuseProducerConsumer, Normalize,
+                                       PassManager)
+
+    n = 8
+    b = ProgramBuilder("halo_probe")
+    Hm = n + taps - 1
+    b.array("img", (n + 2 * (taps - 1), n), partition=(0, 1), ports=("w", "r"))
+    b.array("acc", (Hm, n), partition=(0, 1), ports=("w", "r"))
+    b.array("mid", (Hm, n), partition=(0, 1), ports=("w", "r"))
+    b.array("out", (n, n), partition=(0, 1), ports=("w", "r"))
+    # producer, unfused form: accumulate taps, then scale pointwise
+    with b.loop("pi", 0, Hm) as i:
+        with b.loop("pj", 0, n) as j:
+            t = [b.load("img", i + t_, j) for t_ in range(taps)]
+            b.store("acc", b.sum_tree(t), i, j)
+    with b.loop("si", 0, Hm) as i:
+        with b.loop("sj", 0, n) as j:
+            b.store("mid", b.mul(b.load("acc", i, j), b.const(1.0 / taps)), i, j)
+    # consumer conv over the fused producer's output
+    with b.loop("ci", 0, n) as i:
+        with b.loop("cj", 0, n) as j:
+            t = [b.mul(b.load("mid", i + t_, j), b.const(1.0 / taps))
+                 for t_ in range(taps)]
+            b.store("out", b.sum_tree(t), i, j)
+    # equal-bounds fusion only: the probe MEASURES the cross-nest slack, so
+    # the consumer must stay a separate nest (shift fusion would absorb it)
+    p = PassManager([Normalize(), FuseProducerConsumer(enable_shift=False)],
+                    verify=True).run(b.build())
+    assert len(p.body) == 2, "accumulate+scale must fuse into the producer"
+    s = compile_program(p)
+    prod, _ = p.body
+    ii_row = s.iis[prod.uid]
+    # the RAW dependence edges on `mid` carry the slack: lower = delay - slack
+    # = wr_latency + halo_rows * II_row; the worst edge is the deepest tap.
+    worst = max(e.lower for e in s.edges
+                if e.kind == "RAW" and e.array == "mid")
+    return max(1, -(-(worst - 1) // ii_row))  # ceil
+
+
+# (taps, n) -> "dse" or "fallback(<reason>)": which path produced the config
+# returned by stencil_dse_config — tests assert the DSE sweep actually ran,
+# so a silently broken sweep cannot hide behind the fallback's equal values.
+_CONFIG_SOURCE: dict[tuple[int, int], str] = {}
+
+
+def _stencil_dse_sweep(taps: int, n: int) -> tuple[int, int]:
+    """Run the explore() sweep and read the config off the winning fusion;
+    raises RuntimeError when the sweep finds no shifted fusion of bx."""
+    from repro.core import explore
+    from repro.core.programs import blur_chain
+    from repro.core.transforms import LoopTile
+
+    p = blur_chain(n, storage="reg", taps=taps)
+    r = explore(p, verify=True, max_candidates=6, unroll_factors=(),
+                tile_sizes=(4,))
+    best_fused = None
+    halo = None
+    for c in sorted(r.candidates, key=lambda c: c.latency):
+        for entry in getattr(c.program, "_fusion_log", []):
+            if "bx" in entry["arrays"] and entry["shift"][0] > 0:
+                best_fused, halo = c, entry["shift"][0]
+                break
+        if best_fused is not None:
+            break
+    if best_fused is None:
+        raise RuntimeError("DSE sweep found no shifted fusion of bx")
+    block_rows = 8
+    for ps in best_fused.passes:
+        if isinstance(ps, LoopTile) and ps.sizes:
+            block_rows = max(ps.sizes.values())
+    return block_rows, halo
+
+
+@functools.lru_cache()
+def stencil_dse_config(taps: int = 3, n: int = 8) -> tuple[int, int]:
+    """(block_rows, halo) for ``stencil_pipeline``, produced by a DSE sweep.
+
+    ``autotune.explore`` searches transform pipelines over the
+    mismatched-bounds blur chain; the best candidate that shift-and-peel
+    fused the intermediate ``bx`` supplies the config: the fusion's row
+    shift (recorded in the program's ``_fusion_log``) is exactly the number
+    of producer rows the consumer must trail by — the line-buffer halo — and
+    a tiling of the fused row loop, when the sweep found one profitable,
+    sets the row-block size.  Falls back to the fixed ``ilp_halo_rows``
+    probe if the sweep yields no shifted fusion; ``stencil_config_source``
+    reports which path produced the values."""
+    try:
+        cfg = _stencil_dse_sweep(taps, n)
+        _CONFIG_SOURCE[(taps, n)] = "dse"
+        return cfg
+    except RuntimeError as e:  # demoted fixed-probe fallback
+        _CONFIG_SOURCE[(taps, n)] = f"fallback({e})"
+        return 8, ilp_halo_rows(taps)
+
+
+def stencil_config_source(taps: int = 3, n: int = 8) -> str:
+    """'dse' when stencil_dse_config's values came from the explore()
+    sweep, else 'fallback(<reason>)'."""
+    stencil_dse_config(taps, n)
+    return _CONFIG_SOURCE[(taps, n)]

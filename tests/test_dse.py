@@ -55,3 +55,56 @@ def test_explore_baseline_matches_compile_program():
     r = explore(p, max_candidates=2, unroll_factors=(), tile_sizes=())
     assert r.baseline.latency == compile_program(p).completion_time()
     assert r.best.latency <= r.baseline.latency
+
+
+def test_explore_enumerates_shifted_fusion():
+    """On a mismatched-bounds chain the DSE must enumerate (and here win
+    with) a shift-and-peel fused candidate under the iso-resource budget."""
+    from repro.core.programs import blur_chain
+    p = blur_chain(8, storage="bram")
+    r = explore(p, verify=True, validate=True, max_candidates=8,
+                unroll_factors=(), tile_sizes=())
+    fused = [c for c in r.candidates if getattr(c.program, "_fusion_log", [])]
+    assert fused, "no shifted-fusion candidate enumerated"
+    best_fused = min(fused, key=lambda c: c.latency)
+    assert best_fused.program._fusion_log[0]["shift"] == [2, 0]
+    assert best_fused.within_budget
+    assert best_fused.latency < r.baseline.latency
+    assert r.best.latency <= best_fused.latency
+
+
+def test_metadata_only_candidates_share_pair_enumeration():
+    """ArrayPartition only rewrites array metadata: a DepAnalysis over the
+    partitioned clone must reuse the original's data-dependence pair
+    enumeration (probed via the module call counter) — while a transform
+    that changes the iteration space must not."""
+    from repro.core import deps
+    from repro.core.deps import DepAnalysis
+    from repro.core.transforms import ArrayPartition, LoopUnroll
+
+    p = harris(6, storage="bram")
+    before = deps.DATA_PAIR_ENUM_RUNS
+    d1 = DepAnalysis(p)
+    assert deps.DATA_PAIR_ENUM_RUNS == before + 1
+
+    q = ArrayPartition().apply(p)
+    d2 = DepAnalysis(q)
+    assert deps.DATA_PAIR_ENUM_RUNS == before + 1, \
+        "metadata-only clone re-ran pair enumeration"
+    # the shared half must produce identical data pairs (kinds + uids)
+    data = lambda d: sorted((pr.X.uid, pr.Y.uid, pr.kind) for pr in d._pairs
+                            if pr.kind != "PORT")
+    assert data(d1) == data(d2)
+
+    # re-analyzing the SAME program also shares
+    DepAnalysis(p)
+    assert deps.DATA_PAIR_ENUM_RUNS == before + 1
+
+    # an iteration-space change must NOT share
+    u = LoopUnroll(2).apply(p)
+    DepAnalysis(u)
+    assert deps.DATA_PAIR_ENUM_RUNS == before + 2
+
+    # and the shared analyses still compile to working schedules
+    s = compile_program(q)
+    assert s.feasible

@@ -1,0 +1,210 @@
+"""Property suite for shift-and-peel producer-consumer fusion (DESIGN.md §6).
+
+The obligations, over the mismatched-bounds chain corpus
+(``programs.CHAIN_BENCHMARKS``) and ~30 random mismatched-bounds affine
+chains:
+
+  * the pass fuses (nonzero shift recorded in ``_fusion_log``) and the
+    result is BIT-exact against unfused sequential execution — fusion only
+    reorders whole operations, it never reassociates arithmetic;
+  * the fused program still schedules, passes the brute-force
+    ``validate_schedule`` oracle, and ``timed_exec`` agrees with
+    ``sequential_exec``;
+  * legality negatives: chains whose dependence distance grows with the
+    problem size (backward-flowing) admit no finite shift and must be
+    refused;
+  * the fused schedule beats the unfused one on the chain corpus (the
+    paper's producer-consumer pipelining claim, Fig. 7).
+
+Full-size variants run under ``-m slow`` (weekly CI).
+"""
+import numpy as np
+import pytest
+
+from repro.core import compile_program
+from repro.core.ir import ProgramBuilder
+from repro.core.programs import CHAIN_BENCHMARKS
+from repro.core.sim import (make_inputs, sequential_exec, timed_exec,
+                            validate_schedule)
+from repro.core.transforms import (FuseProducerConsumer, PassManager,
+                                   differential_check)
+
+_SMALL = {"blur_chain": 8, "conv_pool": 8, "gradient_harris": 6}
+
+# the minimum legal shift of each chain (independent of n for finite-shift
+# chains — that is what makes them fusable — except conv_pool's rate
+# mismatch, whose shift is n/2)
+_EXPECT_SHIFT = {"blur_chain": lambda n: [2, 0],
+                 "conv_pool": lambda n: [n // 2, n // 2],
+                 "gradient_harris": lambda n: [2, 2]}
+
+
+def _bit_exact(p, q, seed=0):
+    inp = make_inputs(p, seed)
+    got = sequential_exec(q, {k: v.copy() for k, v in inp.items()})
+    want = sequential_exec(p, inp)
+    for k in want:
+        assert np.array_equal(want[k], got[k]), f"array {k} not bit-exact"
+
+
+# ---------------------------------------------------------------------------
+# Chain corpus
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(CHAIN_BENCHMARKS))
+@pytest.mark.parametrize("storage", ["reg", "bram"])
+def test_chain_fuses_bit_exact(name, storage):
+    n = _SMALL[name]
+    p = CHAIN_BENCHMARKS[name](n, storage=storage)
+    q = PassManager([FuseProducerConsumer()], verify=True).run(p)
+    assert q is not p, "mismatched-bounds chain must fuse"
+    log = q._fusion_log
+    assert log and log[0]["shift"] == _EXPECT_SHIFT[name](n)
+    assert log[0]["peels"] >= 1
+    _bit_exact(p, q)
+    _bit_exact(p, q, seed=1)
+
+
+@pytest.mark.parametrize("name", sorted(CHAIN_BENCHMARKS))
+def test_chain_fused_schedule_valid_and_faster(name):
+    n = _SMALL[name]
+    p = CHAIN_BENCHMARKS[name](n, storage="bram")
+    q = PassManager([FuseProducerConsumer()], verify=True).run(p)
+    s_unfused = compile_program(p)
+    s = compile_program(q)
+    assert s.feasible
+    assert validate_schedule(q, s) == []
+    inp = make_inputs(q, 0)
+    got, want = timed_exec(q, s, inp), sequential_exec(q, inp)
+    for k in want:
+        np.testing.assert_allclose(got[k], want[k], rtol=1e-12, err_msg=k)
+    # producer-consumer overlap must not regress the unfused schedule
+    assert s.completion_time() <= s_unfused.completion_time(), name
+
+
+def test_noshift_variant_cannot_fuse_chains():
+    """The equal-bounds-only variant must leave every chain alone — the
+    chains exist precisely because their bounds differ."""
+    for name, mk in CHAIN_BENCHMARKS.items():
+        p = mk(_SMALL[name])
+        assert FuseProducerConsumer(enable_shift=False).apply(p) is p, name
+
+
+def test_two_mm_unprofitable_shift_is_refused():
+    """two_mm's tmp dependence distance spans the whole j/k space: the
+    legal shift leaves a single-iteration core, which the profitability
+    gate must refuse (fusing would serialize, not pipeline)."""
+    from repro.core.programs import two_mm
+    p = two_mm(6)
+    assert FuseProducerConsumer().apply(p) is p
+
+
+# ---------------------------------------------------------------------------
+# Random mismatched-bounds chains
+# ---------------------------------------------------------------------------
+
+
+def random_mismatched_chain(seed):
+    """Producer over (H+dh, W+dw) writes X; consumer over (H, W) reads X at
+    forward offsets (o1, o2) — the minimum legal shift — plus (0, 0)."""
+    rng = np.random.default_rng(9000 + seed)
+    H, W = int(rng.integers(4, 8)), int(rng.integers(4, 8))
+    dh, dw = int(rng.integers(1, 4)), int(rng.integers(0, 4))
+    o1 = int(rng.integers(0, dh + 1))
+    o2 = int(rng.integers(0, dw + 1))
+    fn = ["add", "mul", "sub"][int(rng.integers(0, 3))]
+    b = ProgramBuilder(f"mchain{seed}")
+    PH, PW = H + dh, W + dw
+    b.array("inp", (PH + 1, PW + 1), is_arg=True, partition=(0, 1),
+            ports=("w", "r"))
+    b.array("X", (PH, PW), partition=(0, 1), ports=("w", "r"))
+    b.array("out", (H, W), is_arg=True, partition=(0, 1), ports=("w", "r"))
+    with b.loop("pi", 0, PH) as i:
+        with b.loop("pj", 0, PW) as j:
+            v = b.arith(fn, b.load("inp", i, j), b.load("inp", i + 1, j + 1))
+            b.store("X", v, i, j)
+    with b.loop("ci", 0, H) as i:
+        with b.loop("cj", 0, W) as j:
+            x = b.load("X", i + o1, j + o2)
+            y = b.load("X", i, j)
+            b.store("out", b.mul(b.arith(fn, x, y), b.const(0.5)), i, j)
+    return b.build(), (o1, o2)
+
+
+@pytest.mark.parametrize("seed", range(30))
+def test_random_mismatched_chain_fusion(seed):
+    p, (o1, o2) = random_mismatched_chain(seed)
+    q = PassManager([FuseProducerConsumer()], verify=True).run(p)
+    assert q is not p
+    assert q._fusion_log[0]["shift"] == [o1, o2]
+    _bit_exact(p, q, seed=seed)
+    s = compile_program(q)
+    assert s.feasible
+    assert validate_schedule(q, s) == []
+    inp = make_inputs(q, seed)
+    got, want = timed_exec(q, s, inp), sequential_exec(q, inp)
+    for k in want:
+        np.testing.assert_allclose(got[k], want[k], rtol=1e-12, err_msg=k)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_random_backward_chain_rejected(seed):
+    """Backward-flowing variants (consumer reads reversed rows) of the same
+    random chains: no finite shift exists, the pass must refuse."""
+    rng = np.random.default_rng(7000 + seed)
+    n = int(rng.integers(4, 8))
+    b = ProgramBuilder(f"bchain{seed}")
+    b.array("inp", (n + 1, n + 1), is_arg=True, partition=(0, 1),
+            ports=("w", "r"))
+    b.array("X", (n, n), partition=(0, 1), ports=("w", "r"))
+    b.array("out", (n, n), is_arg=True, partition=(0, 1), ports=("w", "r"))
+    with b.loop("pi", 0, n) as i:
+        with b.loop("pj", 0, n) as j:
+            b.store("X", b.add(b.load("inp", i, j), b.load("inp", i + 1, j)),
+                    i, j)
+    rev_rows = bool(rng.integers(0, 2))
+    with b.loop("ci", 0, n) as i:
+        with b.loop("cj", 0, n) as j:
+            idx = ((n - 1) - i, j) if rev_rows else (i, (n - 1) - j)
+            b.store("out", b.mul(b.load("X", *idx), b.const(0.5)), i, j)
+    p = b.build()
+    assert FuseProducerConsumer().apply(p) is p
+
+
+# ---------------------------------------------------------------------------
+# Resource model: peels share the fused datapath
+# ---------------------------------------------------------------------------
+
+
+def test_peeled_fusion_is_dsp_neutral():
+    """Shift-and-peel fusion replicates ops into peel nests, but those run
+    on the fused core's guarded datapath: the resource model must report the
+    same DSP count as the unfused program."""
+    from repro.core.dataflow import resources
+    p = CHAIN_BENCHMARKS["blur_chain"](8, storage="bram")
+    q = PassManager([FuseProducerConsumer()], verify=True).run(p)
+    assert any(getattr(l, "peel", False)
+               for l in q.body), "expected a top-level peel nest"
+    rp = resources(p, compile_program(p), "ours")
+    rq = resources(q, compile_program(q), "ours")
+    assert rq["dsp"] == rp["dsp"]
+    assert rq["bram_bytes"] == rp["bram_bytes"]
+
+
+# ---------------------------------------------------------------------------
+# Full-size variants (weekly tier)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", sorted(CHAIN_BENCHMARKS))
+def test_chain_fusion_fullsize(name):
+    p = CHAIN_BENCHMARKS[name](storage="bram")
+    q = PassManager([FuseProducerConsumer()], verify=True).run(p)
+    assert q is not p
+    _bit_exact(p, q)
+    s_unfused = compile_program(p)
+    s = compile_program(q)
+    assert s.feasible
+    assert s.completion_time() < s_unfused.completion_time()

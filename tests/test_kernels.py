@@ -47,9 +47,40 @@ def test_stencil_pipeline_sweep(H, W, br, dtype):
                                np.asarray(want), rtol=tol, atol=tol)
 
 
-def test_stencil_halo_matches_ilp():
-    """The kernel's hard-coded halo must equal the ILP-derived value."""
-    assert ops.ilp_halo_rows(3) == 2
+def test_stencil_pipeline_single_implementation():
+    """ops.stencil_pipeline and stencil_pipeline.stencil_pipeline used to be
+    two diverging definitions; both import paths must now resolve to the
+    same function object."""
+    from repro.kernels import stencil_pipeline as spmod
+    assert ops.stencil_pipeline is spmod.stencil_pipeline
+    assert ops.ilp_halo_rows is spmod.ilp_halo_rows
+    assert ops.stencil_dse_config is spmod.stencil_dse_config
+
+
+def test_stencil_config_from_dse_sweep():
+    """The kernel's block/halo config is produced by an explore() sweep over
+    the shift-and-peel-fused blur chain: the winning fusion's row shift is
+    the halo.  It must agree with the (demoted, fallback-only) fixed probe
+    for the 3-tap chain — and must actually have COME from the sweep, not
+    from the fallback quietly returning the same values."""
+    from repro.kernels.stencil_pipeline import stencil_config_source
+    block_rows, halo = ops.stencil_dse_config()
+    assert stencil_config_source() == "dse"
+    assert halo == 2 == ops.ilp_halo_rows(3)
+    assert block_rows >= 1
+
+
+def test_stencil_pipeline_dse_default_config():
+    """Calling the kernel without an explicit block/halo must route through
+    the DSE-derived config and still match the oracle."""
+    key = jax.random.key(4)
+    img = _rand(key, (18, 34), jnp.float32)
+    wx = jnp.asarray([0.25, 0.5, 0.25])
+    wy = jnp.asarray([0.2, 0.6, 0.2])
+    got = ops.stencil_pipeline(img, wx, wy, interpret=True)
+    want = ref.stencil_pipeline_ref(img, wx, wy)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
 
 
 @pytest.mark.parametrize("B,H,S,hd,chunk", [(1, 2, 128, 64, 64),

@@ -140,15 +140,22 @@ def test_fusion_legal_pointwise():
     differential_check(p, q, seeds=(0, 1, 2))
 
 
-def test_fusion_illegal_forward_read_is_rejected():
+def test_fusion_forward_read_shifts_and_peels():
     """Consumer reads a row the producer has not written yet at the fused
-    iteration: the exact ILP legality check must refuse to fuse."""
+    iteration: zero-shift fusion is illegal (the exact ILP check refuses),
+    but a one-row consumer shift with a peeled prologue row is legal — the
+    noshift variant must still reject it."""
     p = _chain(6, 1)
+    assert FuseProducerConsumer(enable_shift=False).apply(p) is p
     q = FuseProducerConsumer().apply(p)
-    assert q is p  # unchanged: fusion would reverse a RAW dependence
+    assert q is not p
+    assert q._fusion_log[0]["shift"] == [1, 0]
+    assert q._fusion_log[0]["peels"] >= 1
+    differential_check(p, q, seeds=(0, 1, 2))
     # and the WAR direction: the second nest writes X[i+1][j], which the
     # first nest still has to read (as X[i][j]) at a LATER iteration — the
-    # fused second nest would clobber it one iteration too early
+    # fused second nest would clobber it one iteration too early unless it
+    # is shifted one row behind the producer
     b = ProgramBuilder("war")
     b.array("X", (7, 6), partition=(0, 1), ports=("w", "r"))
     b.array("Y", (6, 6), partition=(0, 1), ports=("w", "r"))
@@ -159,9 +166,30 @@ def test_fusion_illegal_forward_read_is_rejected():
         with b.loop("cj", 0, 6) as j:
             b.store("X", b.mul(b.load("Y", i, j), b.const(0.5)), i + 1, j)
     p2 = b.build()
+    assert FuseProducerConsumer(enable_shift=False).apply(p2) is p2
     q2 = FuseProducerConsumer().apply(p2)
-    assert q2 is p2
+    assert q2 is not p2 and q2._fusion_log[0]["shift"] == [1, 0]
     differential_check(p2, q2)
+
+
+def test_fusion_backward_flowing_dependence_is_rejected():
+    """Consumer reads the producer's rows in REVERSE: the dependence
+    distance grows with the problem size, so no finite shift leaves a
+    usable fused core — the pass must refuse for every variant."""
+    for n in (6, 8):
+        b = ProgramBuilder("rev")
+        b.array("inp", (n, n), is_arg=True, partition=(0, 1), ports=("w", "r"))
+        b.array("X", (n, n), partition=(0, 1), ports=("w", "r"))
+        b.array("out", (n, n), is_arg=True, partition=(0, 1), ports=("w", "r"))
+        with b.loop("pi", 0, n) as i:
+            with b.loop("pj", 0, n) as j:
+                b.store("X", b.mul(b.load("inp", i, j), b.const(2.0)), i, j)
+        with b.loop("ci", 0, n) as i:
+            with b.loop("cj", 0, n) as j:
+                b.store("out", b.mul(b.load("X", (n - 1) - i, j),
+                                     b.const(0.5)), i, j)
+        p = b.build()
+        assert FuseProducerConsumer().apply(p) is p
 
 
 def test_fusion_crossed_iv_names():
