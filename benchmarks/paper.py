@@ -24,7 +24,17 @@ FUSION_JSON = os.path.join(os.path.dirname(__file__), os.pardir,
 _DSE_SIZES = {"unsharp": 16, "harris": 8, "dus": 16, "optical_flow": 8,
               "two_mm": 8}
 
-_FUSION_SIZES = {"blur_chain": 16, "conv_pool": 16, "gradient_harris": 12}
+_FUSION_SIZES = {"blur_chain": 16, "conv_pool": 16, "gradient_harris": 12,
+                 "correlated_chain": 16}
+
+# Pareto-frontier DSE snapshot (hls.compile): frontier sizes + hypervolume
+# vs the old greedy explore() winner, next to the other BENCH_*.json files.
+PARETO_JSON = os.path.join(os.path.dirname(__file__), os.pardir,
+                           "BENCH_pareto.json")
+
+_PARETO_SIZES = {"blur_chain": 8, "conv_pool": 8, "gradient_harris": 6,
+                 "correlated_chain": 8, "harris": 6, "optical_flow": 6,
+                 "two_mm": 6}
 
 
 def compute(storage: str = "reg", force: bool = False) -> dict:
@@ -35,7 +45,7 @@ def compute(storage: str = "reg", force: bool = False) -> dict:
     if storage in cache:
         return cache[storage]
 
-    from repro.core import compile_program
+    from repro.core.autotune import compile_program
     from repro.core.dataflow import (analyze_dataflow, resources, to_spsc,
                                      vitis_dataflow_latency)
     from repro.core.programs import BENCHMARKS
@@ -80,7 +90,7 @@ def compute_dse(storage: str = "bram", force: bool = False) -> dict:
     if storage in cache and not force:
         return cache[storage]
 
-    from repro.core import explore
+    from repro.core.api import explore
     from repro.core.programs import BENCHMARKS
 
     out = {}
@@ -123,7 +133,7 @@ def compute_fusion(storage: str = "bram", force: bool = False) -> dict:
     if storage in cache and not force:
         return cache[storage]
 
-    from repro.core import explore
+    from repro.core.api import explore
     from repro.core.programs import CHAIN_BENCHMARKS
 
     out = {}
@@ -164,6 +174,102 @@ def compute_fusion(storage: str = "bram", force: bool = False) -> dict:
     cache[storage] = out
     json.dump(cache, open(FUSION_JSON, "w"), indent=1)
     return cache[storage]
+
+
+def _hypervolume2d(points: list[tuple], ref: tuple) -> float:
+    """Dominated 2D hypervolume (minimization) of ``points`` w.r.t. the
+    reference corner ``ref``: the area between the non-dominated staircase
+    and ``ref``.  Points beyond the reference contribute nothing."""
+    pts = sorted({(min(x, ref[0]), min(y, ref[1])) for x, y in points})
+    hv = 0.0
+    last_y = ref[1]
+    for x, y in pts:
+        if y < last_y:
+            hv += (ref[0] - x) * (last_y - y)
+            last_y = y
+    return hv
+
+
+def compute_pareto(storage: str = "bram", force: bool = False) -> dict:
+    """Pareto-frontier DSE sweep (hls.compile, DESIGN.md §6): for every
+    mismatched-bounds chain plus harris/optical_flow/two_mm, record the
+    frontier (pipelines + objective vectors), its latency x BRAM
+    hypervolume normalized to the baseline design, and the comparison
+    against the old greedy single-frontier explore() winner — the frontier
+    must contain a point dominating-or-equal to it (no regression).
+    Results go to ``BENCH_pareto.json``."""
+    cache = {}
+    if os.path.exists(PARETO_JSON):
+        cache = json.load(open(PARETO_JSON))
+    if storage in cache and not force:
+        return cache[storage]
+
+    from repro.core import hls
+    from repro.core.autotune import _greedy_explore, dominates
+    from repro.core.programs import (CHAIN_BENCHMARKS, harris, optical_flow,
+                                     two_mm)
+
+    progs = {**CHAIN_BENCHMARKS, "harris": harris,
+             "optical_flow": optical_flow, "two_mm": two_mm}
+    out = {}
+    for name, mk in progs.items():
+        n = _PARETO_SIZES.get(name, 8)
+        p = mk(n, storage=storage)
+        t0 = time.time()
+        greedy = _greedy_explore(p, max_candidates=16)
+        r = hls.compile(p, search=hls.SearchConfig(max_candidates=16))
+        base = r.baseline
+
+        def norm(c):
+            return (c.latency / max(base.latency, 1),
+                    c.res["bram_bytes"] / max(base.res["bram_bytes"], 1.0))
+
+        ref = (1.05, 1.05)  # just beyond the baseline corner
+        gv = greedy.best.objectives()
+        out[name] = {
+            "n": n,
+            "baseline": {"latency": base.latency, **base.res},
+            "frontier_size": len(r.frontier),
+            "frontier": [
+                {"pipeline": r.pipeline_of(c), "latency": c.latency, **c.res}
+                for c in r.frontier],
+            "hypervolume": round(
+                _hypervolume2d([norm(c) for c in r.frontier], ref), 5),
+            "greedy_hypervolume": round(
+                _hypervolume2d([norm(greedy.best)], ref), 5),
+            "greedy_winner": {"pipeline": greedy.best.desc,
+                              "latency": greedy.best.latency,
+                              **greedy.best.res},
+            "dominates_greedy": bool(any(
+                dominates(c.objectives(), gv) or c.objectives() == gv
+                for c in r.frontier)),
+            "best_pipeline": r.pipeline_of(),
+            "knee_pipeline": r.pipeline_of(r.knee("latency", "bram")),
+            "pareto_seconds": round(time.time() - t0, 2),
+        }
+        if not out[name]["dominates_greedy"]:
+            raise RuntimeError(
+                f"pareto sweep: frontier of '{name}' (n={n}) contains no "
+                f"point dominating-or-equal the greedy winner {gv}")
+    cache[storage] = out
+    json.dump(cache, open(PARETO_JSON, "w"), indent=1)
+    return out
+
+
+def pareto_table(res: dict) -> list[tuple]:
+    """Frontier size + hypervolume vs the greedy winner, per program."""
+    rows = []
+    for name, r in res.items():
+        rows.append((f"{name}.frontier_size", r["pareto_seconds"] * 1e6,
+                     r["frontier_size"]))
+        rows.append((f"{name}.hypervolume", 0.0, r["hypervolume"]))
+        rows.append((f"{name}.greedy_hypervolume", 0.0,
+                     r["greedy_hypervolume"]))
+        rows.append((f"{name}.dominates_greedy", 0.0,
+                     int(r["dominates_greedy"])))
+        rows.append((f"{name}.knee", 0.0,
+                     r["knee_pipeline"].replace(",", ";") or "baseline"))
+    return rows
 
 
 def fusion_table(res: dict) -> list[tuple]:

@@ -47,6 +47,16 @@ def main() -> None:
         res = paper.compute_dse(storage="bram", force=True)
         _emit([(f"dse.bram.{n}", us, d) for n, us, d in paper.dse_table(res)])
 
+    if only in (None, "pareto"):
+        print("# === Pareto-frontier DSE — hls.compile frontier sizes + "
+              "latency x BRAM hypervolume vs the old greedy explore() winner "
+              "(DESIGN.md §6) ===")
+        # always re-run: this section IS the no-regression check (it raises
+        # when a frontier stops dominating the greedy winner)
+        res = paper.compute_pareto(storage="bram", force=True)
+        _emit([(f"pareto.bram.{n}", us, d)
+               for n, us, d in paper.pareto_table(res)])
+
     if only in (None, "fusion"):
         print("# === shift-and-peel fusion — mismatched-bounds stencil chains, "
               "fused vs unfused schedule (DESIGN.md §6) ===")

@@ -12,8 +12,9 @@ sys.path.insert(0, "src")
 
 import numpy as np
 
-from repro.core import compile_program, emit_hir
-from repro.core.programs import fig1_conv_chain, fig3_conv1d
+from repro.core import emit_hir, hls
+from repro.core.autotune import compile_program
+from repro.core.programs import blur_chain, fig1_conv_chain, fig3_conv1d
 from repro.core.sim import make_inputs, sequential_exec, timed_exec, \
     validate_schedule
 from repro.core import pipeline_ilp, overlap
@@ -44,7 +45,26 @@ def main():
     print("schedule validated: timed execution == sequential semantics")
 
     print("=" * 70)
-    print("3. Same ILP, new fabric: pipeline-parallel schedule synthesis")
+    print("3. Declarative front end: hls.compile + the Pareto frontier")
+    print("=" * 70)
+    p = blur_chain(8, storage="bram")
+    r = hls.compile(p, objectives=(hls.minimize("latency"),
+                                   hls.minimize("bram")),
+                    search=hls.SearchConfig(max_candidates=10,
+                                            unroll_factors=(),
+                                            tile_sizes=(2, 4)))
+    print(f"{len(r.frontier)} non-dominated designs "
+          f"(latency x BRAM x DSP x FF):")
+    for c in r.frontier:
+        print(f"  latency={c.latency:4d} bram={c.res['bram_bytes']:6.0f}B "
+              f"ff={c.res['ff_bits']:5.0f}b  pipeline: "
+              f"{r.pipeline_of(c) or '<none>'}")
+    knee = r.knee("latency", "bram")
+    print(f"knee point: {r.pipeline_of(knee) or '<none>'} "
+          f"(what the Pallas stencil kernel reads its block/halo from)")
+
+    print("=" * 70)
+    print("4. Same ILP, new fabric: pipeline-parallel schedule synthesis")
     print("=" * 70)
     ps = pipeline_ilp.synthesize(4, 8, t_f=1, t_b=2)
     print(f"4 stages x 8 microbatches: II={ps.ii} ticks/microbatch "
@@ -55,7 +75,7 @@ def main():
           f"{4 * 8})")
 
     print("=" * 70)
-    print("4. Compute/comm overlap plan (ring all-gather matmul)")
+    print("5. Compute/comm overlap plan (ring all-gather matmul)")
     print("=" * 70)
     plan = overlap.plan_ring_overlap(8)
     print(f"8-step ring: II={plan.ii} (1 = send/matmul fully overlapped), "

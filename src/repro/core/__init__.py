@@ -2,6 +2,14 @@
 # multi-dimensional (intra-loop + producer-consumer) pipelining, plus its
 # applications inside the JAX framework (pipeline-parallel schedule synthesis,
 # collective/compute overlap, Pallas line-buffer sizing).
+#
+# The blessed compilation entry point is the declarative front end
+# ``repro.core.hls`` (api.py): ``hls.compile(program, spec)``.  The old
+# ``compile_program``/``explore`` names remain importable from this package
+# but are deprecated shims — accessing them emits one DeprecationWarning
+# (see DESIGN.md §6 MIGRATION).
+import warnings as _warnings
+
 from .ir import (AffExpr, ArrayDecl, ArithOp, ConstOp, LoadOp, Loop, Program,
                  ProgramBuilder, StoreOp, aff, iv, normalize)
 from .ilp import solve_ilp, solve_lp, brute_force_ilp
@@ -9,18 +17,52 @@ from .deps import DepAnalysis, DepEdge
 from .scheduler import Schedule, schedule, feasible, emit_hir
 from .transforms import (ArrayPartition, FuseProducerConsumer, LoopTile,
                          LoopUnroll, Normalize, Pass, PassManager,
-                         PassVerificationError, ToSPSC, TRANSFORMS,
+                         PassVerificationError, PASS_TAGS, ToSPSC, TRANSFORMS,
                          differential_check, to_spsc)
-from .autotune import (DSECandidate, DSEResult, autotune, compile_program,
-                       explore)
+from .pipeline_parse import (PipelineSyntaxError, parse_pipeline,
+                             print_pipeline)
+from .dataflow import ResourceVector
+from .autotune import (DSECandidate, DSEResult, MOVE_FAMILIES, PARETO_METRICS,
+                       ParetoResult, autotune, dominates, pareto_explore)
+from . import api as hls
+from .api import (CompileResult, CompileSpec, Constraint, DesignPoint,
+                  Objective, SearchConfig, Target, constraint, minimize)
 
 __all__ = [
     "AffExpr", "ArrayDecl", "ArithOp", "ConstOp", "LoadOp", "Loop", "Program",
     "ProgramBuilder", "StoreOp", "aff", "iv", "normalize",
     "solve_ilp", "solve_lp", "brute_force_ilp",
     "DepAnalysis", "DepEdge", "Schedule", "schedule", "feasible", "emit_hir",
-    "Pass", "PassManager", "PassVerificationError", "TRANSFORMS",
+    "Pass", "PassManager", "PassVerificationError", "TRANSFORMS", "PASS_TAGS",
     "Normalize", "LoopUnroll", "LoopTile", "ArrayPartition",
     "FuseProducerConsumer", "ToSPSC", "to_spsc", "differential_check",
-    "autotune", "compile_program", "explore", "DSECandidate", "DSEResult",
+    "parse_pipeline", "print_pipeline", "PipelineSyntaxError",
+    "ResourceVector", "autotune", "DSECandidate", "DSEResult",
+    "pareto_explore", "ParetoResult", "dominates", "PARETO_METRICS",
+    "MOVE_FAMILIES",
+    "hls", "CompileSpec", "CompileResult", "Target", "Objective",
+    "Constraint", "constraint", "minimize", "SearchConfig", "DesignPoint",
+    # deprecated shims, served lazily with a DeprecationWarning:
+    "compile_program", "explore",
 ]
+
+_DEPRECATED = {
+    "compile_program": "hls.compile(p, pipeline=()).best.schedule",
+    "explore": 'hls.compile(p, constraints=("bram <= 1.0x baseline", '
+               '"dsp <= 1.0x baseline"))',
+}
+
+
+def __getattr__(name: str):
+    """PEP 562 lazy attributes: the deprecated entry points keep working
+    (``from repro.core import compile_program, explore``) but warn once per
+    import site; internal code imports the primitives from their modules
+    directly and never pays the warning."""
+    if name in _DEPRECATED:
+        _warnings.warn(
+            f"repro.core.{name} is deprecated; use repro.core."
+            f"{_DEPRECATED[name]} instead (DESIGN.md §6 MIGRATION)",
+            DeprecationWarning, stacklevel=2)
+        from . import api
+        return getattr(api, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

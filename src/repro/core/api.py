@@ -1,0 +1,493 @@
+"""Declarative HLS compilation front end (exported as ``repro.core.hls``).
+
+The public surface is one call::
+
+    from repro.core import hls
+
+    result = hls.compile(program, hls.CompileSpec(
+        target=hls.Target(capacities={"dsp": 48}),
+        objectives=(hls.minimize("latency"), hls.minimize("bram")),
+        constraints=("bram <= 1.0x baseline",),
+    ))
+    result.best          # the design point the objectives select
+    result.frontier      # every non-dominated design (pipelines + schedules
+                         # + resource vectors) — the Fig. 9 trade-off curve
+    result.explain()     # per-candidate accept/reject reasons
+
+``CompileSpec`` carries *what the caller wants* — a ``Target`` (resource
+model mode + per-resource capacities), one or more ``Objective``s
+(lexicographic by default, ``combine="weighted"`` for scalarization),
+``Constraint``s (absolute like ``dsp <= 48`` or relative to the baseline
+design like ``bram <= 1.0x baseline``), and optionally a fixed
+``pipeline`` — either ``Pass`` objects or the MLIR-style textual syntax
+(``"normalize,fuse{shift=true},tile{sizes=8,8},unroll{factor=2}"``,
+``pipeline_parse``).  With a pipeline the front end compiles exactly that
+program; without one it runs the Pareto-frontier DSE
+(``autotune.pareto_explore``) over the move families in ``SearchConfig``.
+
+The old entry points remain importable from ``repro.core`` as deprecated
+shims (one ``DeprecationWarning`` at access):
+
+    compile_program(p)    ==  hls.compile(p, pipeline=()).best.schedule
+    explore(p, budget)    ==  hls.compile(p, constraints=<budget>) viewed
+                              through the legacy DSEResult shape
+
+(DESIGN.md §6 MIGRATION has the full mapping.)
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field, replace as dc_replace
+from typing import Optional, Sequence, Union
+
+from .autotune import (DSECandidate, DSEResult, MOVE_FAMILIES,
+                       PARETO_METRICS, ParetoResult, dominates,
+                       measure_candidate, pareto_explore, validate_candidate)
+from .ir import Program
+from .pipeline_parse import parse_pipeline, print_pipeline
+from .transforms import Pass
+
+# A design point of the frontier (pipeline + schedule + resource vector).
+DesignPoint = DSECandidate
+
+# Short metric aliases accepted anywhere a metric/resource is named.
+METRIC_ALIASES = {
+    "latency": "latency",
+    "bram": "bram_bytes", "bram_bytes": "bram_bytes",
+    "dsp": "dsp",
+    "ff": "ff_bits", "ff_bits": "ff_bits",
+    "lut": "lut",
+}
+
+
+def _canon_metric(name: str, *, what: str = "metric",
+                  allow_latency: bool = True) -> str:
+    key = METRIC_ALIASES.get(str(name).strip().lower())
+    if key is None or (key == "latency" and not allow_latency):
+        valid = sorted(k for k, v in METRIC_ALIASES.items()
+                       if allow_latency or v != "latency")
+        raise ValueError(f"unknown {what} {name!r}; valid: {', '.join(valid)}")
+    return key
+
+
+# ---------------------------------------------------------------------------
+# Spec vocabulary: Objective / Constraint / Target / SearchConfig
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Objective:
+    """Minimize one metric.  ``weight`` only matters under
+    ``combine="weighted"`` (each metric is normalized by the baseline's
+    value before weighting, so weights compare like-with-like)."""
+
+    metric: str
+    weight: float = 1.0
+
+    def __post_init__(self):
+        object.__setattr__(self, "metric", _canon_metric(self.metric,
+                                                         what="objective"))
+        if self.weight <= 0:
+            raise ValueError(f"objective weight must be > 0, got {self.weight}")
+
+
+def minimize(metric: str, weight: float = 1.0) -> Objective:
+    """``minimize("latency")`` / ``minimize("bram", weight=2.0)``."""
+    return Objective(metric, weight)
+
+
+_CONSTRAINT_RE = re.compile(
+    r"^\s*(?P<res>[A-Za-z_]+)\s*<=\s*(?P<num>[0-9]*\.?[0-9]+)\s*"
+    r"(?P<rel>x\s*baseline)?\s*$")
+
+
+@dataclass(frozen=True)
+class Constraint:
+    """An upper bound on one resource: absolute (``limit``) or relative to
+    the baseline design's own usage (``scale`` — ``1.0`` = iso-resource)."""
+
+    resource: str
+    limit: Optional[float] = None
+    scale: Optional[float] = None
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "resource",
+            _canon_metric(self.resource, what="constraint resource",
+                          allow_latency=False))
+        if (self.limit is None) == (self.scale is None):
+            raise ValueError(
+                "a Constraint needs exactly one of limit= (absolute) or "
+                "scale= (x baseline)")
+
+    @classmethod
+    def parse(cls, text: str) -> "Constraint":
+        """``"dsp <= 48"`` (absolute) or ``"bram <= 1.0x baseline"``
+        (relative).  Only upper bounds exist — resources are costs."""
+        m = _CONSTRAINT_RE.match(text)
+        if not m:
+            raise ValueError(
+                f"malformed constraint {text!r}: expected "
+                "'<resource> <= <number>' or "
+                "'<resource> <= <number>x baseline' "
+                "(resources: bram, dsp, ff, lut)")
+        num = float(m.group("num"))
+        if m.group("rel"):
+            return cls(m.group("res"), scale=num)
+        return cls(m.group("res"), limit=num)
+
+
+def constraint(text: str) -> Constraint:
+    """Alias of ``Constraint.parse`` for spec literals."""
+    return Constraint.parse(text)
+
+
+@dataclass(frozen=True)
+class Target:
+    """Where the design must fit: resource-model mode + hard capacities.
+
+    ``mode`` selects the costing model (``dataflow.resources``): "ours"
+    (default), "vitis_seq", or "vitis_dataflow".  ``capacities`` are
+    absolute per-resource ceilings of the device (merged with the spec's
+    ``Constraint``s; the tighter bound wins)."""
+
+    name: str = "generic"
+    mode: str = "ours"
+    capacities: tuple[tuple[str, float], ...] = ()
+
+    def __init__(self, name: str = "generic", mode: str = "ours",
+                 capacities: Union[dict, Sequence, None] = None):
+        if mode not in ("ours", "vitis_seq", "vitis_dataflow"):
+            raise ValueError(
+                f"unknown target mode {mode!r}; valid: ours, vitis_seq, "
+                "vitis_dataflow")
+        caps = dict(capacities or {})
+        norm = tuple(sorted(
+            (_canon_metric(k, what="capacity resource", allow_latency=False),
+             float(v)) for k, v in caps.items()))
+        object.__setattr__(self, "name", name)
+        object.__setattr__(self, "mode", mode)
+        object.__setattr__(self, "capacities", norm)
+
+
+@dataclass(frozen=True)
+class SearchConfig:
+    """Knobs of the Pareto search (ignored when the spec fixes a
+    pipeline).  ``moves`` selects move families out of
+    ``autotune.MOVE_FAMILIES``; ``validate`` additionally runs the
+    brute-force schedule/execution oracles on the selected best point."""
+
+    moves: tuple[str, ...] = MOVE_FAMILIES
+    unroll_factors: tuple[int, ...] = (2, 4)
+    tile_sizes: tuple[int, ...] = (4,)
+    max_candidates: int = 24
+    verify: bool = True
+    validate: bool = False
+    seeds: tuple[int, ...] = (0,)
+
+
+@dataclass(frozen=True)
+class CompileSpec:
+    """The declarative compilation request ``hls.compile`` consumes."""
+
+    target: Target = field(default_factory=Target)
+    objectives: tuple[Objective, ...] = (Objective("latency"),)
+    constraints: tuple[Union[Constraint, str], ...] = ()
+    pipeline: Union[str, Sequence[Pass], None] = None
+    combine: str = "lex"            # "lex" | "weighted"
+    search: SearchConfig = field(default_factory=SearchConfig)
+
+    def __post_init__(self):
+        if self.combine not in ("lex", "weighted"):
+            raise ValueError(
+                f"unknown combine mode {self.combine!r}; valid: lex, weighted")
+        objs = tuple(o if isinstance(o, Objective) else minimize(o)
+                     for o in self.objectives)
+        if not objs:
+            raise ValueError("CompileSpec needs at least one objective")
+        cons = tuple(Constraint.parse(c) if isinstance(c, str) else c
+                     for c in self.constraints)
+        for c in cons:
+            if not isinstance(c, Constraint):
+                raise ValueError(f"not a Constraint: {c!r}")
+        object.__setattr__(self, "objectives", objs)
+        object.__setattr__(self, "constraints", cons)
+
+
+# ---------------------------------------------------------------------------
+# CompileResult
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class CompileResult:
+    """What ``hls.compile`` returns.
+
+    ``frontier`` holds every feasible non-dominated design point (latency ×
+    BRAM × DSP × FF), sorted by objective vector; ``best`` is the frontier
+    point the spec's objectives select (the baseline when everything was
+    rejected — ``explain()`` says why).  ``candidates`` is the full search
+    trace including dominated and over-capacity points."""
+
+    program: Program
+    spec: CompileSpec
+    baseline: DesignPoint
+    best: DesignPoint
+    frontier: list[DesignPoint] = field(default_factory=list)
+    candidates: list[DesignPoint] = field(default_factory=list)
+    rejected: list[tuple[str, str]] = field(default_factory=list)
+    caps: dict[str, float] = field(default_factory=dict)
+
+    @property
+    def schedule(self):
+        return self.best.schedule
+
+    @property
+    def speedup(self) -> float:
+        """baseline latency / best latency (1.0 on degenerate latencies)."""
+        if self.best.latency <= 0 or self.baseline.latency <= 0:
+            return 1.0
+        return self.baseline.latency / self.best.latency
+
+    def pipeline_of(self, point: Optional[DesignPoint] = None) -> str:
+        """The textual pipeline of a design point (round-trips through
+        ``hls.compile(p, pipeline=...)``)."""
+        return print_pipeline((point or self.best).passes)
+
+    def knee(self, x: str = "latency", y: str = "bram",
+             among: Optional[Sequence[DesignPoint]] = None) -> DesignPoint:
+        """The knee point of the (x, y) projection of the frontier: the
+        point closest (normalized Euclidean) to the ideal corner
+        (min-x, min-y).  Degenerate axes (all equal) contribute zero."""
+        pts = list(among if among is not None else self.frontier)
+        if not pts:
+            raise ValueError("knee() on an empty frontier")
+        kx = _canon_metric(x, what="knee axis")
+        ky = _canon_metric(y, what="knee axis")
+        xs = [c.metric(kx) for c in pts]
+        ys = [c.metric(ky) for c in pts]
+        rx = (max(xs) - min(xs)) or 1.0
+        ry = (max(ys) - min(ys)) or 1.0
+
+        def dist(c):
+            return math.hypot((c.metric(kx) - min(xs)) / rx,
+                              (c.metric(ky) - min(ys)) / ry)
+
+        return min(pts, key=lambda c: (dist(c), c.objectives()))
+
+    def explain(self) -> str:
+        """Per-candidate accept/reject reasons, frontier first."""
+        lines = [f"objectives: " + ", ".join(
+            f"minimize({o.metric})" +
+            (f"*{o.weight:g}" if o.weight != 1.0 else "")
+            for o in self.spec.objectives)]
+        if self.caps:
+            lines.append("capacities: " + ", ".join(
+                f"{k} <= {v:g}" for k, v in sorted(self.caps.items())))
+        order = {id(c): i for i, c in enumerate(self.frontier)}
+        for c in sorted(self.candidates,
+                        key=lambda c: (id(c) not in order,
+                                       order.get(id(c), 0), c.desc)):
+            mark = " <- best" if c is self.best else ""
+            lines.append(
+                f"  {c.desc}: latency={c.latency} " +
+                " ".join(f"{k}={c.res[k]:g}"
+                         for k in ("bram_bytes", "dsp", "ff_bits")) +
+                f" [{c.status or 'ok'}]{mark}")
+        for desc, reason in self.rejected:
+            if not any(c.desc == desc for c in self.candidates):
+                lines.append(f"  {desc}: [{reason}]")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# hls.compile
+# ---------------------------------------------------------------------------
+
+
+def _select_best(frontier: Sequence[DesignPoint], baseline: DesignPoint,
+                 spec: CompileSpec) -> DesignPoint:
+    if not frontier:
+        return baseline
+    metrics = [o.metric for o in spec.objectives]
+    if spec.combine == "weighted":
+        def score(c: DesignPoint) -> float:
+            total = 0.0
+            for o in spec.objectives:
+                base = baseline.metric(o.metric) or 1.0
+                total += o.weight * c.metric(o.metric) / base
+            return total
+        return min(frontier, key=lambda c: (score(c), c.objectives()))
+    order = metrics + [m for m in PARETO_METRICS if m not in metrics]
+    return min(frontier, key=lambda c: tuple(c.metric(m) for m in order))
+
+
+def _resolve_spec(spec: Optional[CompileSpec], overrides: dict) -> CompileSpec:
+    spec = spec or CompileSpec()
+    if not isinstance(spec, CompileSpec):
+        raise TypeError(f"spec must be a CompileSpec, got {type(spec).__name__}")
+    clean = {k: v for k, v in overrides.items() if v is not None}
+    if "objectives" in clean and not isinstance(clean["objectives"],
+                                                (tuple, list)):
+        clean["objectives"] = (clean["objectives"],)
+    if "constraints" in clean and isinstance(clean["constraints"],
+                                             (str, Constraint)):
+        clean["constraints"] = (clean["constraints"],)
+    return dc_replace(spec, **clean) if clean else spec
+
+
+def compile(program: Program, spec: Optional[CompileSpec] = None, *,
+            target: Optional[Target] = None,
+            objectives=None, constraints=None,
+            pipeline: Union[str, Sequence[Pass], None] = None,
+            combine: Optional[str] = None,
+            search: Optional[SearchConfig] = None,
+            verbose: bool = False) -> CompileResult:
+    """Compile ``program`` per a declarative ``CompileSpec``.
+
+    Keyword arguments override the corresponding spec fields, so quick
+    calls need no spec object: ``hls.compile(p, pipeline="fuse,partition")``
+    or ``hls.compile(p, constraints=("dsp <= 48",))``.
+
+    * With ``pipeline`` (textual string or ``Pass`` list): parse, verify,
+      apply, compile — exactly that design; the frontier is that single
+      point (plus the baseline when distinct).
+    * Without: run the Pareto-frontier DSE and return the full frontier.
+
+    The empty pipeline ``()`` compiles the program as-is — the
+    ``compile_program`` migration path.
+    """
+    spec = _resolve_spec(spec, dict(target=target, objectives=objectives,
+                                    constraints=constraints,
+                                    pipeline=pipeline, combine=combine,
+                                    search=search))
+    sc = spec.search
+    caps: dict[str, float] = {}
+    rel: dict[str, float] = {}
+    for k, v in spec.target.capacities:
+        caps[k] = min(caps.get(k, v), v)
+    for c in spec.constraints:
+        if c.limit is not None:
+            caps[c.resource] = min(caps.get(c.resource, c.limit), c.limit)
+        else:
+            rel[c.resource] = min(rel.get(c.resource, c.scale), c.scale)
+
+    if spec.pipeline is not None:
+        passes = parse_pipeline(spec.pipeline) \
+            if isinstance(spec.pipeline, str) else list(spec.pipeline)
+        for ps in passes:
+            if not isinstance(ps, Pass):
+                raise TypeError(f"pipeline element is not a Pass: {ps!r}")
+        baseline = measure_candidate(program, "baseline", [],
+                                     verify=sc.verify, seeds=sc.seeds,
+                                     mode=spec.target.mode)
+        baseline.status = "baseline"
+        for k, scale in rel.items():
+            ceil = scale * baseline.res[k]
+            caps[k] = min(caps.get(k, ceil), ceil)
+        if passes:
+            point = measure_candidate(program, print_pipeline(passes), passes,
+                                      verify=sc.verify, seeds=sc.seeds,
+                                      mode=spec.target.mode,
+                                      incremental=False)
+            if point is None:   # the WHOLE pipeline applied nothing
+                point = baseline
+        else:
+            point = baseline
+        candidates = [baseline] + ([point] if point is not baseline else [])
+        rejected: list[tuple[str, str]] = []
+        viol = point.res.violations(caps)
+        if viol:
+            point.within_budget = False
+            point.status = "over budget: " + "; ".join(viol)
+            rejected.append((point.desc, point.status))
+            frontier = []
+        else:
+            point.within_budget = True
+            if point.status != "baseline":
+                point.status = "frontier"
+            frontier = [point]
+        if sc.validate and not viol:
+            validate_candidate(point, sc.seeds)
+        return CompileResult(program=program, spec=spec, baseline=baseline,
+                             best=point, frontier=frontier,
+                             candidates=candidates, rejected=rejected,
+                             caps=caps)
+
+    r: ParetoResult = pareto_explore(
+        program, caps=caps, rel_caps=rel, moves=sc.moves,
+        unroll_factors=sc.unroll_factors, tile_sizes=sc.tile_sizes,
+        max_candidates=sc.max_candidates, verify=sc.verify, seeds=sc.seeds,
+        mode=spec.target.mode, verbose=verbose)
+    best = _select_best(r.frontier, r.baseline, spec)
+    if sc.validate:
+        validate_candidate(best, sc.seeds)
+    return CompileResult(program=program, spec=spec, baseline=r.baseline,
+                         best=best, frontier=r.frontier,
+                         candidates=r.candidates, rejected=r.rejected,
+                         caps=r.caps)
+
+
+# ---------------------------------------------------------------------------
+# Deprecated shims (surfaced via repro.core.__getattr__ with a
+# DeprecationWarning; see DESIGN.md §6 MIGRATION)
+# ---------------------------------------------------------------------------
+
+
+def compile_program(p: Program, verbose: bool = False):
+    """Deprecated: ``hls.compile(p, pipeline=()).best.schedule``."""
+    if verbose:  # the legacy verbose flag printed autotuner II probes
+        from .autotune import compile_program as _impl
+        return _impl(p, verbose=True)
+    return compile(p, pipeline=()).best.schedule
+
+
+def explore(p: Program, budget: Optional[dict[str, float]] = None, *,
+            unroll_factors: Sequence[int] = (2, 4),
+            tile_sizes: Sequence[int] = (4,),
+            max_candidates: int = 24,
+            verify: bool = True,
+            validate: bool = False,
+            seeds: Sequence[int] = (0,),
+            verbose: bool = False) -> DSEResult:
+    """Deprecated: resource-aware DSE in the legacy ``DSEResult`` shape.
+
+    ``budget`` maps resource names to absolute ceilings (unknown keys
+    raise); ``budget=None`` is iso-resource (baseline BRAM/DSP).  Now
+    backed by the Pareto engine: ``best`` is the budget-feasible
+    minimum-latency frontier point; when the budget rejects EVERY
+    candidate the baseline is returned as ``best`` (``within_budget``
+    False) with the rejection reasons in ``DSEResult.rejections`` /
+    ``explain()``.  Equivalent declarative call::
+
+        hls.compile(p, constraints=("bram <= 1.0x baseline",
+                                    "dsp <= 1.0x baseline"))
+    """
+    from .dataflow import RESOURCE_KEYS
+
+    if budget is not None:
+        unknown = set(budget) - set(RESOURCE_KEYS)
+        if unknown:
+            raise ValueError(
+                f"unknown budget resource(s) {sorted(unknown)}; "
+                f"valid keys: {sorted(RESOURCE_KEYS)}")
+        caps, rel = dict(budget), {}
+    else:
+        caps, rel = {}, {"bram_bytes": 1.0, "dsp": 1.0}
+
+    r = pareto_explore(p, caps=caps, rel_caps=rel,
+                       unroll_factors=unroll_factors, tile_sizes=tile_sizes,
+                       max_candidates=max_candidates, verify=verify,
+                       seeds=seeds, verbose=verbose)
+    feasible = [c for c in r.candidates if c.within_budget]
+    if feasible:
+        best = min(feasible, key=lambda c: (c.latency, c.res["bram_bytes"],
+                                            c.res["dsp"], c.res["ff_bits"]))
+    else:
+        best = r.baseline  # graceful: every candidate rejected
+    if validate:
+        validate_candidate(best, seeds)
+    return DSEResult(baseline=r.baseline, best=best, candidates=r.candidates,
+                     budget=r.caps, frontier=r.frontier,
+                     rejections=r.rejected)

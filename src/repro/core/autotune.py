@@ -11,13 +11,16 @@ edge on the IIs of the loops in its iteration vectors, so a probe that
 moves one loop's II only re-solves the dependences touching that loop —
 and those via the closed-form fast path, not branch-and-bound.
 
-DSE (``explore``, DESIGN.md §6): the scheduler finds the best schedule for
-a *fixed* program, but the paper's headline wins depend on program shape.
-``explore(p, budget)`` searches semantics-preserving transform pipelines
-(fuse / partition / unroll / tile from ``transforms``), compiles every
-candidate through the incremental scheduler, and returns the minimum-latency
-schedule whose ``resources()`` stay under the budget — turning the repo from
-"schedule one program" into "compile a workload".
+DSE (``pareto_explore``, DESIGN.md §6): the scheduler finds the best
+schedule for a *fixed* program, but the paper's headline wins depend on
+program shape.  The search layer explores semantics-preserving transform
+pipelines (fuse / partition / unroll / tile from ``transforms``), compiles
+every candidate through the incremental scheduler, and maintains a
+dominance-pruned archive over the objective space (latency, BRAM, DSP, FF)
+— the Fig. 9 trade-off curve — expanded frontier-first rather than by
+single-best hill climbing.  The declarative entry point is
+``repro.core.hls.compile`` (api.py); ``explore``/``compile_program`` live
+on as deprecated shims there.
 """
 from __future__ import annotations
 
@@ -113,32 +116,64 @@ def compile_program(p: Program, verbose: bool = False) -> Schedule:
 
 
 # ---------------------------------------------------------------------------
-# Resource-aware design-space exploration (DESIGN.md §6)
+# Design-space exploration (DESIGN.md §6): candidates + objective space
 # ---------------------------------------------------------------------------
+
+# The objective space of the Pareto search: scheduled latency plus the
+# Fig. 9 resource axes the paper trades it against.
+PARETO_METRICS = ("latency", "bram_bytes", "dsp", "ff_bits")
 
 
 @dataclass
 class DSECandidate:
-    """One explored point: a transform pipeline + its compiled schedule."""
+    """One explored design point: a transform pipeline + its compiled
+    schedule, resource vector and search status.  (Exported from the
+    declarative front end as ``hls.DesignPoint``.)"""
 
     desc: str                     # human-readable pipeline description
     passes: tuple[Pass, ...]
     program: Program
     schedule: Schedule
     latency: int
-    res: dict[str, float]         # resources(program, schedule, "ours")
+    res: dict[str, float]         # dataflow.resources(program, schedule, mode)
     within_budget: bool
+    status: str = ""              # "baseline" | "frontier" | "dominated by
+    #                               <desc>" | "over budget: <violations>"
+
+    def metric(self, key: str) -> float:
+        return float(self.latency) if key == "latency" else float(self.res[key])
+
+    def objectives(self, keys: Sequence[str] = PARETO_METRICS) -> tuple:
+        return tuple(self.metric(k) for k in keys)
+
+
+def dominates(u: Sequence[float], v: Sequence[float],
+              tol: float = 1e-9) -> bool:
+    """Pareto dominance: <= on every axis, < on at least one."""
+    return all(a <= b + tol for a, b in zip(u, v)) and \
+        any(a < b - tol for a, b in zip(u, v))
 
 
 @dataclass
 class DSEResult:
+    """Legacy result shape of the deprecated ``explore`` shim (the
+    declarative path returns ``hls.CompileResult``).  ``frontier`` and
+    ``rejections`` are populated by the Pareto engine underneath."""
+
     baseline: DSECandidate
     best: DSECandidate
     candidates: list[DSECandidate] = field(default_factory=list)
     budget: dict[str, float] = field(default_factory=dict)
+    frontier: list[DSECandidate] = field(default_factory=list)
+    rejections: list[tuple[str, str]] = field(default_factory=list)
 
     @property
     def speedup(self) -> float:
+        """baseline latency / best latency; 1.0 for degenerate (zero-cycle)
+        baselines so an empty or fully-rejected search never divides by
+        zero — check ``rejections`` / ``explain()`` for why."""
+        if self.best.latency <= 0 or self.baseline.latency <= 0:
+            return 1.0
         return self.baseline.latency / self.best.latency
 
     def table(self) -> list[tuple[str, int, float, float, bool]]:
@@ -147,6 +182,20 @@ class DSEResult:
                  c.within_budget) for c in self.candidates]
         rows.sort(key=lambda r: (not r[4], r[1], r[2], r[3]))
         return rows
+
+    def explain(self) -> str:
+        """Per-candidate accept/reject report (see CompileResult.explain)."""
+        lines = []
+        for c in self.candidates:
+            lines.append(
+                f"{c.desc}: latency={c.latency} "
+                + " ".join(f"{k}={c.res[k]:g}" for k in
+                           ("bram_bytes", "dsp", "ff_bits"))
+                + f" [{c.status or ('ok' if c.within_budget else 'over budget')}]")
+        for desc, reason in self.rejections:
+            if not any(c.desc == desc for c in self.candidates):
+                lines.append(f"{desc}: [{reason}]")
+        return "\n".join(lines)
 
 
 def _budget_key(res: dict[str, float], budget: dict[str, float]) -> bool:
@@ -169,7 +218,8 @@ def _tile_moves(p: Program, sizes: Sequence[int]) -> list[LoopTile]:
     """One tiling move per size, strip-mining every top-level loop it
     divides (order-preserving, so always legal)."""
     moves = []
-    tops = [it for it in p.body if isinstance(it, Loop)]
+    tops = [it for it in p.body if isinstance(it, Loop)
+            and it.tile_block is None]  # don't re-strip an existing tile
     for s in sizes:
         cfg = {l.ivname: s for l in tops if l.trip % s == 0 and l.trip // s >= 2}
         if cfg:
@@ -177,57 +227,254 @@ def _tile_moves(p: Program, sizes: Sequence[int]) -> list[LoopTile]:
     return moves
 
 
-def explore(p: Program, budget: Optional[dict[str, float]] = None, *,
-            unroll_factors: Sequence[int] = (2, 4),
-            tile_sizes: Sequence[int] = (4,),
-            max_candidates: int = 24,
-            verify: bool = True,
-            validate: bool = False,
-            seeds: Sequence[int] = (0,),
-            verbose: bool = False) -> DSEResult:
-    """Resource-aware DSE over transform pipelines.
+def measure_candidate(p: Program, desc: str, passes: Sequence[Pass], *,
+                      base: Optional[Program] = None,
+                      base_passes: Sequence[Pass] = (),
+                      verify: bool = True, seeds: Sequence[int] = (0,),
+                      mode: str = "ours",
+                      incremental: bool = True) -> Optional[DSECandidate]:
+    """Apply ``passes`` on top of ``base`` (an already-verified
+    intermediate, default the original program ``p``), compile, and cost.
+    Incremental composition does not re-apply and re-verify the whole
+    pipeline prefix — equivalence to ``p`` is transitive through the
+    verified base.
 
-    ``budget`` maps resource names (keys of ``dataflow.resources``:
-    ``bram_bytes`` / ``dsp`` / ``ff_bits`` / ``lut``) to ceilings; missing
-    keys are unconstrained (unknown keys raise).  ``budget=None`` means
-    *iso-resource*: the baseline program's own BRAM and DSP become the
-    ceiling, so any winner is faster at equal-or-lower memory/datapath
-    cost.  If NO candidate (baseline included) fits the budget, the overall
-    min-latency candidate is returned with ``within_budget=False`` — check
-    the flag when passing a tight explicit budget.
-
-    Every candidate pipeline is verified by differential execution
-    (``verify=True``, PassManager contract) before it is compiled; with
-    ``validate=True`` the winner's schedule additionally passes the
-    brute-force ``validate_schedule``/``timed_exec`` oracles (small
-    programs only — it enumerates dynamic instances).
-
-    Search: every single move, then greedy composition on top of the best
-    within-budget candidate, bounded by ``max_candidates`` compilations.
-    """
+    Returns None for a no-op: under ``incremental=True`` (the DSE's
+    one-move-at-a-time composition) when the NEWEST move applied nothing —
+    the result would duplicate an already-measured candidate; under
+    ``incremental=False`` (a caller-specified fixed pipeline) only when
+    the WHOLE pipeline applied nothing — a fixed pipeline whose last pass
+    happens not to fire must still yield the earlier passes' design."""
     from .dataflow import resources
 
-    def measure(desc: str, passes: Sequence[Pass],
-                base: Optional[Program] = None,
-                base_passes: Sequence[Pass] = ()) -> Optional[DSECandidate]:
-        """Apply ``passes`` on top of ``base`` (an already-verified
-        intermediate, default the original program) so greedy composition
-        does not re-apply and re-verify the whole frontier prefix —
-        equivalence to ``p`` is transitive through the verified base."""
-        start = base if base is not None else p
-        pm = PassManager(passes, verify=verify, seeds=seeds)
-        q = pm.run(start)
-        if passes and (q is start or not pm.reports[-1].changed):
-            # the pipeline (or its newest move) applied nothing: the result
-            # is identical to an already-measured candidate — don't compile
-            # it again or record a duplicate under a longer desc
-            return None
-        s = compile_program(q)
-        res = resources(q, s, "ours")
-        return DSECandidate(
-            desc=desc or "baseline", passes=tuple(base_passes) + tuple(passes),
-            program=q, schedule=s, latency=s.completion_time(), res=res,
-            within_budget=True)
+    start = base if base is not None else p
+    pm = PassManager(passes, verify=verify, seeds=seeds)
+    q = pm.run(start)
+    if passes and (q is start or
+                   (incremental and not pm.reports[-1].changed)):
+        return None
+    s = compile_program(q)
+    res = resources(q, s, mode)
+    return DSECandidate(
+        desc=desc or "baseline", passes=tuple(base_passes) + tuple(passes),
+        program=q, schedule=s, latency=s.completion_time(), res=res,
+        within_budget=True)
+
+
+def validate_candidate(c: DSECandidate, seeds: Sequence[int] = (0,)) -> None:
+    """Brute-force oracles for a DSE winner: ``validate_schedule`` plus
+    ``timed_exec`` vs ``sequential_exec`` (small programs only — this
+    enumerates dynamic instances).  Raises AssertionError explicitly so the
+    check survives ``python -O``."""
+    from .sim import (make_inputs, sequential_exec, timed_exec,
+                      validate_schedule)
+    violations = validate_schedule(c.program, c.schedule)
+    if violations:
+        raise AssertionError(
+            f"DSE winner '{c.desc}' fails validate_schedule: "
+            f"{violations[:5]}")
+    import numpy as np
+    inp = make_inputs(c.program, seeds[0])
+    got = timed_exec(c.program, c.schedule, inp)
+    want = sequential_exec(c.program, inp)
+    for k in want:
+        if not np.allclose(got[k], want[k], rtol=1e-12, atol=0):
+            raise AssertionError(
+                f"DSE winner '{c.desc}': timed_exec differs from "
+                f"sequential_exec on array {k}")
+
+
+# Move families the search can draw from (SearchConfig.moves selects a
+# subset — e.g. the Pallas stencil sweep excludes "partition", a knob the
+# kernel's VMEM line buffer cannot express).
+MOVE_FAMILIES = ("fuse", "partition", "unroll", "tile")
+
+
+def _single_moves(p: Program, families: Sequence[str],
+                  unroll_factors: Sequence[int],
+                  tile_sizes: Sequence[int]) -> list[tuple[str, Pass]]:
+    moves: list[tuple[str, Pass]] = []
+    unknown = set(families) - set(MOVE_FAMILIES)
+    if unknown:
+        raise ValueError(f"unknown move families {sorted(unknown)}; "
+                         f"valid: {MOVE_FAMILIES}")
+    if "fuse" in families:
+        # shift-and-peel fusion (mismatched bounds fuse too) plus the
+        # equal-bounds-only variant: peeling trades prologue nests for core
+        # overlap, which is not always the latency winner — enumerate both
+        moves += [("fuse", FuseProducerConsumer()),
+                  ("fuse(noshift)", FuseProducerConsumer(enable_shift=False))]
+    if "partition" in families:
+        moves.append(("partition", ArrayPartition()))
+    if "unroll" in families:
+        moves += [(f"unroll(x{f})", LoopUnroll(f))
+                  for f in _unroll_factors_for(p, unroll_factors)]
+    if "tile" in families:
+        moves += [(t.name, t) for t in _tile_moves(p, tile_sizes)]
+    return moves
+
+
+@dataclass
+class ParetoResult:
+    """Output of the Pareto-frontier DSE (wrapped by hls.CompileResult)."""
+
+    baseline: DSECandidate
+    frontier: list[DSECandidate]            # feasible + non-dominated
+    candidates: list[DSECandidate]          # every compiled design point
+    rejected: list[tuple[str, str]]         # (desc, reason) — capacity etc.
+    caps: dict[str, float]                  # resolved absolute ceilings
+    compiles: int
+
+
+def pareto_explore(p: Program, *,
+                   caps: Optional[dict[str, float]] = None,
+                   rel_caps: Optional[dict[str, float]] = None,
+                   moves: Sequence[str] = MOVE_FAMILIES,
+                   unroll_factors: Sequence[int] = (2, 4),
+                   tile_sizes: Sequence[int] = (4,),
+                   max_candidates: int = 24,
+                   verify: bool = True,
+                   seeds: Sequence[int] = (0,),
+                   mode: str = "ours",
+                   verbose: bool = False) -> ParetoResult:
+    """Pareto-frontier DSE over transform pipelines (DESIGN.md §6).
+
+    Maintains a dominance-pruned archive over the objective space
+    ``PARETO_METRICS`` = (latency, bram_bytes, dsp, ff_bits) and expands it
+    frontier-first: the still-unexpanded archive member with the lowest
+    latency gets every applicable single move appended; children that
+    survive capacity checks and dominance pruning join the archive and the
+    expansion queue.  The search stops when the archive has no unexpanded
+    member or ``max_candidates`` compilations were spent.
+
+    ``caps`` are absolute resource ceilings, ``rel_caps`` scale the
+    BASELINE's own usage (``{"bram_bytes": 1.0}`` = iso-BRAM); violating
+    candidates are recorded (with the violated capacities as their reject
+    reason) but never enter the archive.  Dominated candidates stay in
+    ``candidates`` with a ``dominated by <desc>`` status — that record is
+    what ``CompileResult.explain()`` prints.
+    """
+    from .dataflow import RESOURCE_KEYS
+
+    caps = dict(caps or {})
+    unknown = (set(caps) | set(rel_caps or {})) - set(RESOURCE_KEYS)
+    if unknown:
+        raise ValueError(f"unknown capacity resource(s) {sorted(unknown)}; "
+                         f"valid keys: {sorted(RESOURCE_KEYS)}")
+
+    baseline = measure_candidate(p, "baseline", [], verify=verify,
+                                 seeds=seeds, mode=mode)
+    for k, scale in (rel_caps or {}).items():
+        ceil = scale * baseline.res[k]
+        caps[k] = min(caps.get(k, ceil), ceil)
+
+    def fits(c: DSECandidate) -> list[str]:
+        return c.res.violations(caps)
+
+    baseline.within_budget = not fits(baseline)
+    baseline.status = "baseline"
+    candidates = [baseline]
+    rejected: list[tuple[str, str]] = []
+    archive: list[DSECandidate] = [baseline] if baseline.within_budget else []
+    if not archive:
+        rejected.append((baseline.desc,
+                         "over budget: " + "; ".join(fits(baseline))))
+    queue: list[DSECandidate] = [baseline]  # expand even an infeasible root
+    seen_descs = {"baseline"}
+    compiles = 1
+    base_moves = _single_moves(p, moves, unroll_factors, tile_sizes)
+
+    def insert(c: DSECandidate) -> None:
+        """Capacity check + dominance-pruned archive insertion."""
+        viol = fits(c)
+        if viol:
+            c.within_budget = False
+            c.status = "over budget: " + "; ".join(viol)
+            rejected.append((c.desc, c.status))
+            return
+        vec = c.objectives()
+        for a in archive:
+            avec = a.objectives()
+            if dominates(avec, vec) or avec == vec:
+                c.status = f"dominated by {a.desc}"
+                return
+        newly_dominated = [a for a in archive
+                           if dominates(vec, a.objectives())]
+        for a in newly_dominated:
+            a.status = f"dominated by {c.desc}"
+            if a in queue:
+                queue.remove(a)
+        archive[:] = [a for a in archive if a not in newly_dominated]
+        archive.append(c)
+        c.status = "frontier"
+        queue.append(c)
+
+    while queue and compiles < max_candidates:
+        # frontier-first: expand the most promising (lowest-latency)
+        # non-dominated point next
+        queue.sort(key=lambda c: (c.latency, c.res["bram_bytes"]))
+        cur = queue.pop(0)
+        base_descs = cur.desc.split(" | ") if cur.passes else []
+        # tile moves are re-derived from the expansion base: fusion renames
+        # loops, so tiling the *fused* nest (the knob the Pallas kernel
+        # layer reads as its block size) is only reachable this way
+        level_moves = base_moves
+        if "tile" in moves:
+            level_moves = base_moves + [
+                (t.name, t) for t in _tile_moves(cur.program, tile_sizes)
+                if t.name not in {d for d, _ in base_moves}]
+        for desc, mv in level_moves:
+            if desc in base_descs:
+                continue
+            full = " | ".join(base_descs + [desc])
+            if full in seen_descs:
+                continue
+            if compiles >= max_candidates:
+                break
+            seen_descs.add(full)
+            c = measure_candidate(p, full, [mv], base=cur.program,
+                                  base_passes=cur.passes, verify=verify,
+                                  seeds=seeds, mode=mode)
+            if c is None:
+                continue  # the move applied nothing
+            compiles += 1
+            candidates.append(c)
+            insert(c)
+            if verbose:
+                print(f"  dse: {full}: latency={c.latency} res={dict(c.res)} "
+                      f"[{c.status}]")
+
+    frontier = sorted(archive, key=lambda c: c.objectives())
+    return ParetoResult(baseline=baseline, frontier=frontier,
+                        candidates=candidates, rejected=rejected,
+                        caps=caps, compiles=compiles)
+
+
+# ---------------------------------------------------------------------------
+# The pre-Pareto greedy driver, kept verbatim as the no-regression oracle:
+# benchmarks/run.py pareto and tests/test_api.py compare every new frontier
+# against this single-frontier hill climb's winner.
+# ---------------------------------------------------------------------------
+
+
+def _greedy_explore(p: Program, budget: Optional[dict[str, float]] = None, *,
+                    unroll_factors: Sequence[int] = (2, 4),
+                    tile_sizes: Sequence[int] = (4,),
+                    max_candidates: int = 24,
+                    verify: bool = True,
+                    validate: bool = False,
+                    seeds: Sequence[int] = (0,),
+                    verbose: bool = False) -> DSEResult:
+    """Greedy single-frontier resource-aware DSE (the old ``explore``).
+
+    ``budget=None`` means iso-resource (baseline BRAM/DSP as ceilings);
+    search = every single move, then greedy composition on top of the best
+    within-budget candidate, bounded by ``max_candidates`` compilations.
+    """
+    def measure(desc, passes, base=None, base_passes=()):
+        return measure_candidate(p, desc, passes, base=base,
+                                 base_passes=base_passes, verify=verify,
+                                 seeds=seeds)
 
     baseline = measure("baseline", [])
     if budget is None:
@@ -241,25 +488,12 @@ def explore(p: Program, budget: Optional[dict[str, float]] = None, *,
             f"valid keys: {sorted(baseline.res)}")
     baseline.within_budget = _budget_key(baseline.res, budget)
 
-    moves: list[tuple[str, Pass]] = [
-        # shift-and-peel fusion (mismatched bounds fuse too) plus the
-        # equal-bounds-only variant: peeling trades prologue nests for core
-        # overlap, which is not always the latency winner — enumerate both
-        ("fuse", FuseProducerConsumer()),
-        ("fuse(noshift)", FuseProducerConsumer(enable_shift=False)),
-        ("partition", ArrayPartition()),
-    ]
-    moves += [(f"unroll(x{f})", LoopUnroll(f))
-              for f in _unroll_factors_for(p, unroll_factors)]
-    moves += [(t.name, t) for t in _tile_moves(p, tile_sizes)]
-
+    moves = _single_moves(p, MOVE_FAMILIES, unroll_factors, tile_sizes)
     candidates: list[DSECandidate] = [baseline]
     seen_descs = {"baseline"}
     compiles = 1
 
-    def try_pipeline(descs: list[str], passes: list[Pass],
-                     base: Optional[Program] = None,
-                     base_passes: Sequence[Pass] = ()) -> Optional[DSECandidate]:
+    def try_pipeline(descs, passes, base=None, base_passes=()):
         nonlocal compiles
         desc = " | ".join(descs)
         if desc in seen_descs or compiles >= max_candidates:
@@ -275,11 +509,9 @@ def explore(p: Program, budget: Optional[dict[str, float]] = None, *,
                       f"{'OK' if c.within_budget else 'OVER-BUDGET'}")
         return c
 
-    # level 1: every single move
     for desc, mv in moves:
         try_pipeline([desc], [mv])
 
-    # greedy composition: extend the best within-budget pipeline so far
     def best_of(cands):
         ok = [c for c in cands if c.within_budget]
         pool = ok or cands
@@ -289,9 +521,6 @@ def explore(p: Program, budget: Optional[dict[str, float]] = None, *,
     frontier = best_of(candidates)
     while compiles < max_candidates:
         base_descs = frontier.desc.split(" | ") if frontier.passes else []
-        # tile moves are re-derived from the frontier program: fusion renames
-        # loops, so tiling the *fused* nest (the knob the Pallas kernel layer
-        # reads as its block size) is only reachable this way
         level_moves = moves + [
             (t.name, t) for t in _tile_moves(frontier.program, tile_sizes)
             if t.name not in {d for d, _ in moves}]
@@ -307,22 +536,6 @@ def explore(p: Program, budget: Optional[dict[str, float]] = None, *,
 
     best = best_of(candidates)
     if validate:
-        # explicit raises (not bare asserts): these oracles must survive -O
-        from .sim import (make_inputs, sequential_exec, timed_exec,
-                          validate_schedule)
-        violations = validate_schedule(best.program, best.schedule)
-        if violations:
-            raise AssertionError(
-                f"DSE winner '{best.desc}' fails validate_schedule: "
-                f"{violations[:5]}")
-        import numpy as np
-        inp = make_inputs(best.program, seeds[0])
-        got = timed_exec(best.program, best.schedule, inp)
-        want = sequential_exec(best.program, inp)
-        for k in want:
-            if not np.allclose(got[k], want[k], rtol=1e-12, atol=0):
-                raise AssertionError(
-                    f"DSE winner '{best.desc}': timed_exec differs from "
-                    f"sequential_exec on array {k}")
+        validate_candidate(best, seeds)
     return DSEResult(baseline=baseline, best=best, candidates=candidates,
                      budget=budget)

@@ -255,22 +255,163 @@ def vitis_dataflow_latency(p: Program, s: Schedule) -> tuple[int, DataflowInfo]:
 
 _DSP = {"mul": 3, "add": 2, "sub": 2, "div": 0, "min": 0, "max": 0, "cmp": 0}
 
+RESOURCE_KEYS = ("bram_bytes", "ff_bits", "lut", "dsp")
 
-def resources(p: Program, s: Schedule, mode: str) -> dict[str, float]:
+
+class ResourceVector(dict):
+    """Typed resource vector — the four Fig. 9 axes with helpers.
+
+    A ``dict`` subclass (fixed keys ``bram_bytes``/``ff_bits``/``lut``/
+    ``dsp``) so existing consumers — JSON serialization, ``res["dsp"]``
+    lookups, equality against plain dicts — keep working unchanged, while
+    the DSE layer gets attribute access, capacity checks and dominance.
+    """
+
+    KEYS = RESOURCE_KEYS
+
+    def __init__(self, bram_bytes: float = 0.0, ff_bits: float = 0.0,
+                 lut: float = 0.0, dsp: float = 0.0):
+        super().__init__(bram_bytes=float(bram_bytes), ff_bits=float(ff_bits),
+                         lut=float(lut), dsp=float(dsp))
+
+    bram_bytes = property(lambda self: self["bram_bytes"])
+    ff_bits = property(lambda self: self["ff_bits"])
+    lut = property(lambda self: self["lut"])
+    dsp = property(lambda self: self["dsp"])
+
+    def as_tuple(self, keys=KEYS) -> tuple[float, ...]:
+        return tuple(self[k] for k in keys)
+
+    def fits(self, caps: Optional[dict]) -> bool:
+        """True when every capped resource is within its ceiling."""
+        return not self.violations(caps)
+
+    def violations(self, caps: Optional[dict]) -> list[str]:
+        """Human-readable list of exceeded capacities (empty = fits)."""
+        out = []
+        for k, v in (caps or {}).items():
+            if self.get(k, 0.0) > v + 1e-9:
+                out.append(f"{k} {self[k]:g} > {v:g}")
+        return out
+
+    def dominates(self, other: dict, tol: float = 1e-9) -> bool:
+        """<= on every axis and < on at least one (Pareto dominance over
+        the resource axes only; the DSE adds latency as a fifth axis)."""
+        le = all(self[k] <= other[k] + tol for k in self.KEYS)
+        lt = any(self[k] < other[k] - tol for k in self.KEYS)
+        return le and lt
+
+
+# -- tile-local (streamed line-buffer) footprints ---------------------------
+
+
+def _top_groups(p: Program) -> list[list]:
+    """Top-level items grouped by ``fuse_group`` (a shift-and-peel fusion's
+    peel nests + core are ONE hardware nest); singleton groups otherwise."""
+    groups: dict = {}
+    order: list = []
+    for item in p.body:
+        g = item.fuse_group if isinstance(item, Loop) else None
+        key = ("g", g) if g is not None else ("i", id(item))
+        if key not in groups:
+            groups[key] = []
+            order.append(key)
+        groups[key].append(item)
+    return [groups[k] for k in order]
+
+
+def tile_window_elems(p: Program) -> dict[str, int]:
+    """array -> streamed-window element count for nest-local intermediates
+    of explicitly tiled nests (DESIGN.md §6).
+
+    An intermediate array (``is_arg=False``) whose every access lives in a
+    single top-level group whose core nest was strip-mined by ``LoopTile``
+    (outermost loop carries ``Loop.tile_block``) never needs full-array
+    storage: one outer-tile iteration touches only a bounded window of
+    addresses (block rows + stencil halo — exactly the VMEM line buffer the
+    Pallas kernel allocates), and the buffer is reused across tiles.  The
+    window is, per dim, the extent of the access indices over the inner ivs
+    with the outer tile iv fixed; that requires every access to agree on
+    the outer iv's coefficient (otherwise the window drifts per tile and we
+    conservatively keep the full array).
+    """
+    groups = _top_groups(p)
+    # array -> set of group indices it is accessed from
+    where: dict[str, set[int]] = {}
+    acc_by_group: list[list] = []
+    for gi, items in enumerate(groups):
+        accs = []
+        for item in items:
+            if isinstance(item, Loop):
+                accs.extend(_task_accesses(p, item))
+        acc_by_group.append(accs)
+        for op, _ in accs:
+            where.setdefault(op.array, set()).add(gi)
+
+    out: dict[str, int] = {}
+    for name, gis in where.items():
+        arr = p.arrays[name]
+        if arr.is_arg or len(gis) != 1:
+            continue
+        (gi,) = gis
+        core = [it for it in groups[gi]
+                if isinstance(it, Loop) and not it.peel]
+        if len(core) != 1 or core[0].tile_block is None:
+            continue
+        outer_iv = core[0].ivname
+        accs = [(op, anc) for op, anc in acc_by_group[gi]
+                if op.array == name and not any(l.peel for l in anc)]
+        if not accs:
+            continue  # only peel nests touch it: window undefined, keep full
+        window = 1
+        ok = True
+        for d in range(len(arr.shape)):
+            coeffs0 = {e0.coeffs.get(outer_iv, 0)
+                       for e0 in (op.index[d] for op, _ in accs)}
+            if len(coeffs0) != 1:
+                ok = False  # accesses disagree on the tile stride
+                break
+            los, his = [], []
+            for op, anc in accs:
+                e = op.index[d]
+                lo = hi = e.const
+                for ivn, c in e.coeffs.items():
+                    if ivn == outer_iv:
+                        continue
+                    loop = next(l for l in anc if l.ivname == ivn)
+                    lo += min(c * loop.lb, c * (loop.ub - 1))
+                    hi += max(c * loop.lb, c * (loop.ub - 1))
+                los.append(lo)
+                his.append(hi)
+            extent = max(his) - min(los) + 1
+            window *= max(1, min(extent, arr.shape[d]))
+        if ok and window < arr.num_elems():
+            out[name] = window
+    return out
+
+
+def resources(p: Program, s: Schedule, mode: str) -> ResourceVector:
     """mode: 'ours' | 'vitis_seq' (no dataflow) | 'vitis_dataflow'."""
     from .ir import ArithOp
 
     bram_bytes = 0.0
     ff_bits = 0.0
     lut = 0.0
+    window = tile_window_elems(p)
     for arr in p.arrays.values():
-        bits = arr.num_elems() * arr.elem_bits
+        bits = window.get(arr.name, arr.num_elems()) * arr.elem_bits
         fully_part = arr.kind == "reg" or len(arr.partition) == len(arr.shape)
         if fully_part:
             ff_bits += bits
         else:
             repl = max(1, -(-len(arr.ports) // 2))  # BRAM = 2 physical ports
             bram_bytes += bits / 8 * repl
+
+    # tile control: block counters + line-buffer rotation per tiled nest
+    for l in p.loops():
+        if l.tile_block is not None:
+            ff_bits += 64
+            lut += 32
 
     # fp datapath units.  Loops peeled off a shift-and-peel fusion
     # (``Loop.peel``) replicate a subrange of the fused core's body: in
@@ -321,4 +462,5 @@ def resources(p: Program, s: Schedule, mode: str) -> dict[str, float]:
                 else:
                     ff_bits += 2 * arr.elem_bits + 70  # FIFO regs + handshake
                     lut += 120
-    return {"bram_bytes": bram_bytes, "ff_bits": ff_bits, "lut": lut, "dsp": dsp}
+    return ResourceVector(bram_bytes=bram_bytes, ff_bits=ff_bits, lut=lut,
+                          dsp=dsp)

@@ -185,6 +185,11 @@ class Loop:
     # True for prologue/epilogue loops peeled off a shifted fusion — their
     # ops replicate (a subrange of) the fused core's and run on its datapath.
     peel: bool = False
+    # Set by LoopTile on the OUTER loop of a strip pair: the inner block
+    # size.  Marks the nest as explicitly tiled, which is what lets the
+    # resource model cost nest-local intermediates at their tile-window
+    # footprint (a streamed line buffer) instead of the full array.
+    tile_block: Optional[int] = None
     uid: int = field(default_factory=lambda: next(_uid))
 
     @property

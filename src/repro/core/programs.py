@@ -346,6 +346,31 @@ def gradient_harris(n: int = 32, storage: str = "reg") -> Program:
     return b.build()
 
 
+def correlated_chain(n: int = 32, storage: str = "reg") -> Program:
+    """Producer/consumer with CORRELATED access distances: the consumer
+    reads ``mid`` at (i+2, j) and (i, j+5), so the dependence-distance
+    vectors are (2, 0) and (0, 5).  The lexicographic-minimum legal shift
+    is their lex-maximum (2, 0); per-level componentwise maxima would
+    overshoot to (2, 5), delaying every row by five columns and peeling
+    five producer columns per row for nothing — the regression this chain
+    pins (ROADMAP: lexicographic-minimum fusion shift)."""
+    b = ProgramBuilder("correlated_chain")
+    b.array("img", (n + 3, n + 6), is_arg=True, **_PRESETS[storage])
+    b.array("mid", (n + 2, n + 5), **_PRESETS[storage])
+    b.array("out", (n, n), is_arg=True, **_PRESETS[storage])
+    with b.loop("mi", 0, n + 2) as i:
+        with b.loop("mj", 0, n + 5) as j:
+            v = b.add(b.load("img", i, j), b.load("img", i + 1, j + 1))
+            b.store("mid", b.mul(v, b.const(0.5)), i, j)
+    with b.loop("oi", 0, n) as i:
+        with b.loop("oj", 0, n) as j:
+            a = b.load("mid", i + 2, j)
+            c = b.load("mid", i, j + 5)
+            d = b.sub(b.mul(a, b.const(0.75)), b.mul(c, b.const(0.25)))
+            b.store("out", d, i, j)
+    return b.build()
+
+
 BENCHMARKS = {
     "unsharp": unsharp,
     "harris": harris,
@@ -361,4 +386,5 @@ CHAIN_BENCHMARKS = {
     "blur_chain": blur_chain,
     "conv_pool": conv_pool,
     "gradient_harris": gradient_harris,
+    "correlated_chain": correlated_chain,
 }

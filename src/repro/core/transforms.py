@@ -153,9 +153,18 @@ class Pass:
     equivalent to the input on the input's arrays.  A pass that does not
     apply (no matching loops, illegal fusion, ...) returns an unchanged
     program rather than raising, so pipelines compose.
+
+    Every pass also has a *textual* identity for the ``hls.compile`` front
+    end (``pipeline_parse``): ``tag`` is its name in the pipeline string
+    syntax, ``params()`` returns the constructor parameters that differ
+    from the defaults (what the printer emits inside ``{...}``), and
+    ``build(params)`` reconstructs the pass from parsed parameters.  The
+    round-trip obligation is ``build(parse(print(p))).signature() ==
+    p.signature()``.
     """
 
     name: str = "pass"
+    tag: str = "pass"
 
     def apply(self, p: Program) -> Program:
         raise NotImplementedError
@@ -163,8 +172,56 @@ class Pass:
     def __call__(self, p: Program) -> Program:
         return self.apply(p)
 
+    def params(self) -> dict:
+        """Textual-syntax parameters (non-default only), printable order."""
+        return {}
+
+    @classmethod
+    def build(cls, params: dict) -> "Pass":
+        """Construct from parsed textual parameters; raises TransformError
+        on unknown or ill-typed keys (pipeline_parse wraps it with source
+        positions)."""
+        if params:
+            raise TransformError(
+                f"pass '{cls.tag}' takes no parameters, got {sorted(params)}")
+        return cls()
+
+    def signature(self) -> tuple:
+        """(tag, canonicalized params) — the round-trip identity."""
+        return (self.tag, tuple(sorted(
+            (k, tuple(v) if isinstance(v, (list, tuple)) else v)
+            for k, v in self.params().items())))
+
     def __repr__(self):
         return f"<{type(self).__name__} {self.name}>"
+
+
+def _param_tuple(v, kind, what: str) -> tuple:
+    """Normalize a parsed parameter value (scalar or list) to a tuple of
+    ``kind``, raising TransformError with a helpful message otherwise."""
+    items = list(v) if isinstance(v, (list, tuple)) else [v]
+    out = []
+    for it in items:
+        if kind is int and isinstance(it, bool):
+            raise TransformError(f"{what}: expected int, got {it!r}")
+        if not isinstance(it, kind):
+            raise TransformError(f"{what}: expected {kind.__name__}, "
+                                 f"got {it!r}")
+        out.append(it)
+    return tuple(out)
+
+
+def _param_scalar(v, kind, what: str):
+    if isinstance(v, (list, tuple)):
+        raise TransformError(f"{what}: expected one {kind.__name__}, "
+                             f"got a list {v!r}")
+    if kind is int and isinstance(v, bool):
+        raise TransformError(f"{what}: expected int, got {v!r}")
+    if kind is float and isinstance(v, int) and not isinstance(v, bool):
+        v = float(v)
+    if not isinstance(v, kind):
+        raise TransformError(f"{what}: expected {kind.__name__}, got {v!r}")
+    return v
 
 
 @dataclass
@@ -264,6 +321,7 @@ class Normalize(Pass):
     guards hand-built Programs entering the pipeline."""
 
     name = "normalize"
+    tag = "normalize"
 
     def apply(self, p: Program) -> Program:
         if not any(l.unroll for l in p.loops()):
@@ -288,6 +346,8 @@ class LoopUnroll(Pass):
     body — spending datapath resources (DSP) for latency.
     """
 
+    tag = "unroll"
+
     def __init__(self, factor: int, ivs: Optional[Sequence[str]] = None):
         if factor < 2:
             raise TransformError(f"unroll factor must be >= 2, got {factor}")
@@ -295,6 +355,27 @@ class LoopUnroll(Pass):
         self.ivs = None if ivs is None else set(ivs)
         self.name = f"unroll(x{factor}" + \
             (f",{','.join(sorted(self.ivs))})" if self.ivs else ")")
+
+    def params(self) -> dict:
+        d: dict = {"factor": self.factor}
+        if self.ivs is not None:
+            d["ivs"] = tuple(sorted(self.ivs))
+        return d
+
+    @classmethod
+    def build(cls, params: dict) -> "LoopUnroll":
+        p = dict(params)
+        if "factor" not in p:
+            raise TransformError("unroll requires factor=<int>")
+        factor = _param_scalar(p.pop("factor"), int, "unroll factor")
+        ivs = p.pop("ivs", None)
+        if ivs is not None:
+            ivs = _param_tuple(ivs, str, "unroll ivs")
+        if p:
+            raise TransformError(
+                f"unroll: unknown parameter(s) {sorted(p)} "
+                "(valid: factor, ivs)")
+        return cls(factor, ivs)
 
     def _eligible(self, loop: Loop) -> bool:
         if loop.unroll or loop.trip % self.factor or loop.lb != 0:
@@ -330,7 +411,8 @@ class LoopUnroll(Pass):
                         body.extend(_clone_body(it.body, sub, ssa, namer))
                     nl = Loop(ivname=it.ivname, lb=0, ub=it.trip // f,
                               pipeline=it.pipeline, ii=None,
-                              fuse_group=it.fuse_group, peel=it.peel)
+                              fuse_group=it.fuse_group, peel=it.peel,
+                              tile_block=it.tile_block)
                     nl.body = body
                     out.append(nl)
                 else:
@@ -347,28 +429,74 @@ class LoopUnroll(Pass):
 
 
 class LoopTile(Pass):
-    """Strip-mine the named loops: ``for i in [0, N)`` becomes
+    """Strip-mine loops: ``for i in [0, N)`` becomes
     ``for i_t in [0, N/s): for i_b in [0, s): i = s*i_t + i_b``.
 
-    The dynamic execution order is untouched (this is tiling without
-    interchange), so semantics are preserved by construction.  Loops whose
-    trip the size does not divide are left alone.
+    ``sizes`` is either a mapping ``iv name -> block size`` or a positional
+    sequence of block sizes applied to the top-level loop nests in program
+    order (the textual syntax ``tile{sizes=8,8}``).  The dynamic execution
+    order is untouched (this is tiling without interchange), so semantics
+    are preserved by construction.  Loops whose trip the size does not
+    divide are left alone.  The outer loop of each strip pair is marked
+    ``Loop.tile_block`` so the resource model can cost nest-local
+    intermediates at their streamed tile-window footprint (DESIGN.md §6).
     """
 
-    def __init__(self, sizes: dict[str, int]):
-        if not sizes or any(s < 2 for s in sizes.values()):
-            raise TransformError(f"tile sizes must be >= 2: {sizes}")
-        self.sizes = dict(sizes)
-        self.name = "tile(" + ",".join(
-            f"{k}:{v}" for k, v in sorted(self.sizes.items())) + ")"
+    tag = "tile"
 
-    def _eligible(self, loop: Loop) -> bool:
-        s = self.sizes.get(loop.ivname)
+    def __init__(self, sizes):
+        if isinstance(sizes, dict):
+            if not sizes or any(s < 2 for s in sizes.values()):
+                raise TransformError(f"tile sizes must be >= 2: {sizes}")
+            self.sizes: Optional[dict[str, int]] = dict(sizes)
+            self.seq: Optional[tuple[int, ...]] = None
+            self.name = "tile(" + ",".join(
+                f"{k}:{v}" for k, v in sorted(self.sizes.items())) + ")"
+        else:
+            seq = tuple(sizes)
+            if not seq or any(not isinstance(s, int) or s < 2 for s in seq):
+                raise TransformError(f"tile sizes must be ints >= 2: {sizes}")
+            self.sizes = None
+            self.seq = seq
+            self.name = "tile(" + ",".join(map(str, seq)) + ")"
+
+    def params(self) -> dict:
+        if self.seq is not None:
+            return {"sizes": self.seq}
+        return dict(sorted(self.sizes.items()))
+
+    @classmethod
+    def build(cls, params: dict) -> "LoopTile":
+        if not params:
+            raise TransformError(
+                "tile requires sizes=<ints> (positional, applied to "
+                "top-level loops in order) or <iv>=<int> pairs")
+        if "sizes" in params:
+            extra = sorted(set(params) - {"sizes"})
+            if extra:
+                raise TransformError(
+                    f"tile: cannot mix sizes= with named loops {extra}")
+            return cls(_param_tuple(params["sizes"], int, "tile sizes"))
+        return cls({k: _param_scalar(v, int, f"tile size for loop '{k}'")
+                    for k, v in params.items()})
+
+    def _resolved(self, p: Program) -> dict[str, int]:
+        """The effective iv -> size map (positional sizes bind to top-level
+        loops in program order at apply time)."""
+        if self.sizes is not None:
+            return self.sizes
+        tops = [it for it in p.body if isinstance(it, Loop)]
+        return {l.ivname: s for l, s in zip(tops, self.seq)}
+
+    @staticmethod
+    def _eligible(loop: Loop, sizes: dict[str, int]) -> bool:
+        s = sizes.get(loop.ivname)
         return (s is not None and not loop.unroll and loop.lb == 0
                 and loop.trip % s == 0 and loop.trip // s >= 2)
 
     def apply(self, p: Program) -> Program:
-        if not any(self._eligible(l) for l in p.loops()):
+        sizes = self._resolved(p)
+        if not any(self._eligible(l, sizes) for l in p.loops()):
             return p
         q = clone_program(p)
 
@@ -379,8 +507,8 @@ class LoopTile(Pass):
                     out.append(it)
                     continue
                 it.body = rec(it.body)
-                if self._eligible(it):
-                    s = self.sizes[it.ivname]
+                if self._eligible(it, sizes):
+                    s = sizes[it.ivname]
                     ot, ib = f"{it.ivname}_t", f"{it.ivname}_b"
                     _rewrite_indices(it.body, {it.ivname: aff(ot) * s + aff(ib)})
                     inner = Loop(ivname=ib, lb=0, ub=s, pipeline=it.pipeline,
@@ -388,7 +516,8 @@ class LoopTile(Pass):
                     inner.body = it.body
                     outer = Loop(ivname=ot, lb=0, ub=it.trip // s,
                                  pipeline=it.pipeline, ii=None,
-                                 fuse_group=it.fuse_group, peel=it.peel)
+                                 fuse_group=it.fuse_group, peel=it.peel,
+                                 tile_block=s)
                     outer.body = [inner]
                     out.append(outer)
                 else:
@@ -415,6 +544,8 @@ class ArrayPartition(Pass):
     the resource model see the change (BRAM -> FF migration).
     """
 
+    tag = "partition"
+
     def __init__(self, arrays: Optional[Sequence[str]] = None,
                  dims: Optional[Sequence[int]] = None,
                  ports: Optional[Sequence[str]] = None):
@@ -424,6 +555,34 @@ class ArrayPartition(Pass):
         tgt = "*" if self.arrays is None else ",".join(self.arrays)
         dd = "full" if self.dims is None else ",".join(map(str, self.dims))
         self.name = f"partition({tgt};dims={dd})"
+
+    def params(self) -> dict:
+        d: dict = {}
+        if self.arrays is not None:
+            d["arrays"] = self.arrays
+        if self.dims is not None:
+            d["dims"] = self.dims
+        if self.ports is not None:
+            d["ports"] = self.ports
+        return d
+
+    @classmethod
+    def build(cls, params: dict) -> "ArrayPartition":
+        p = dict(params)
+        arrays = p.pop("arrays", None)
+        if arrays is not None:
+            arrays = _param_tuple(arrays, str, "partition arrays")
+        dims = p.pop("dims", None)
+        if dims is not None:
+            dims = _param_tuple(dims, int, "partition dims")
+        ports = p.pop("ports", None)
+        if ports is not None:
+            ports = _param_tuple(ports, str, "partition ports")
+        if p:
+            raise TransformError(
+                f"partition: unknown parameter(s) {sorted(p)} "
+                "(valid: arrays, dims, ports)")
+        return cls(arrays, dims, ports)
 
     def apply(self, p: Program) -> Program:
         todo = {}
@@ -536,14 +695,17 @@ def _fusion_hazard(opA, opB, loopsA: list[Loop], loopsB: list[Loop],
 
 
 def _max_dep_distance(opA, opB, loopsA: list[Loop], loopsB: list[Loop],
-                      level: int) -> Optional[int]:
+                      level: int,
+                      fixed: Sequence[tuple[int, int]] = ()) -> Optional[int]:
     """max(va[level] - vb[level]) over address-matching instance pairs of
     ``opA``/``opB`` — the per-level dependence distance that a legal
-    consumer shift must cover.  Returns None when the accesses never alias
-    (no constraint).  Solved closed-form via the deps.py separable solver
-    whenever the address system decomposes; genuinely coupled systems fall
-    back to the branch-and-bound ILP.  Raises TransformError when neither
-    resolves.
+    consumer shift must cover.  ``fixed`` pins earlier levels' distances
+    (``va[k] - vb[k] == d_k``), which is how the lexicographic maximization
+    proceeds level by level.  Returns None when the accesses never alias
+    under the pinned prefix (no constraint).  Solved closed-form via the
+    deps.py separable solver whenever the address system decomposes;
+    genuinely coupled systems fall back to the branch-and-bound ILP.
+    Raises TransformError when neither resolves.
     """
     from .deps import _FALLBACK as _SEP_FALLBACK, _solve_separable
 
@@ -568,6 +730,8 @@ def _max_dep_distance(opA, opB, loopsA: list[Loop], loopsB: list[Loop],
             coeffs[k] = coeffs.get(k, 0) - c
         rows.append(({k: v for k, v in coeffs.items() if v},
                      eb.const - ea.const))
+    for lvl, dist in fixed:  # va[lvl] - vb[lvl] == dist
+        rows.append(({("x", lvl): 1, ("y", lvl): -1}, dist))
     r = _solve_separable(vars, rows)
     if r is None:
         return None
@@ -611,18 +775,24 @@ class FuseProducerConsumer(Pass):
     exactly (``_fusion_hazard``): for every access pair on a shared array
     with at least one write, no dynamic dependence may be reversed by
     fusing.  When the zero-shift fusion is illegal or the bounds differ,
-    the pass computes the minimum componentwise-legal consumer shift — per
-    level, the maximum dependence distance ``max(va_l - vb_l)`` over all
-    conflicting pairs (``_max_dep_distance``, closed form via the deps.py
-    separable solver) — peels the iterations falling outside the shifted
-    intersection of bounds into prologue/epilogue nests, and emits the
-    fused core over the intersection.  Fusions whose core would cover less
-    than ``min_core_fraction`` of the smaller nest at any level (e.g. a
-    dependence distance growing with the problem size — no finite shift)
+    the pass computes the LEXICOGRAPHIC-minimum legal consumer shift — the
+    lex-maximum dependence-distance vector over all conflicting pairs,
+    maximized level by level with earlier levels pinned
+    (``_max_dep_distance``, closed form via the deps.py separable solver)
+    — peels the iterations falling outside the shifted intersection of
+    bounds into prologue/epilogue nests, and emits the fused core over the
+    intersection.  Correlated distances (a large inner distance occurring
+    only with a smaller outer one) therefore no longer inflate the shift
+    the way per-level componentwise maxima did; inner shift components may
+    even be negative (B-side head peels).  Fusions whose core would cover
+    less than ``min_core_fraction`` of the smaller nest at any level (e.g.
+    a dependence distance growing with the problem size — no finite shift)
     are refused.  The pass fuses greedily until a fixpoint, so a pointwise
     chain (e.g. unsharp's sharpen+mask) collapses into one nest the
     scheduler can pipeline with a single II.
     """
+
+    tag = "fuse"
 
     def __init__(self, max_fusions: Optional[int] = None, *,
                  enable_shift: bool = True,
@@ -631,6 +801,36 @@ class FuseProducerConsumer(Pass):
         self.enable_shift = enable_shift
         self.min_core_fraction = min_core_fraction
         self.name = "fuse" if enable_shift else "fuse(noshift)"
+
+    def params(self) -> dict:
+        d: dict = {}
+        if self.max_fusions is not None:
+            d["max_fusions"] = self.max_fusions
+        if not self.enable_shift:
+            d["shift"] = False
+        if self.min_core_fraction != 0.5:
+            d["min_core_fraction"] = self.min_core_fraction
+        return d
+
+    @classmethod
+    def build(cls, params: dict) -> "FuseProducerConsumer":
+        p = dict(params)
+        kw: dict = {}
+        if "shift" in p:
+            kw["enable_shift"] = _param_scalar(p.pop("shift"), bool,
+                                               "fuse shift")
+        if "min_core_fraction" in p:
+            kw["min_core_fraction"] = _param_scalar(
+                p.pop("min_core_fraction"), float, "fuse min_core_fraction")
+        max_fusions = None
+        if "max_fusions" in p:
+            max_fusions = _param_scalar(p.pop("max_fusions"), int,
+                                        "fuse max_fusions")
+        if p:
+            raise TransformError(
+                f"fuse: unknown parameter(s) {sorted(p)} "
+                "(valid: shift, min_core_fraction, max_fusions)")
+        return cls(max_fusions, **kw)
 
     # -- candidate test -----------------------------------------------------
     def _candidate(self, a, b):
@@ -653,25 +853,56 @@ class FuseProducerConsumer(Pass):
                  (isinstance(oa, StoreOp) or isinstance(ob, StoreOp))]
         return loopsA, loopsB, pairs
 
+    def _lexmax_distance(self, oa, ob, loopsA, loopsB) -> Optional[tuple]:
+        """The lexicographically maximal dependence-distance vector
+        ``va - vb`` over address-matching instance pairs, computed level by
+        level: maximize the level's distance with every earlier level
+        pinned at its (already maximal) value.  None when the accesses
+        never alias."""
+        d = len(loopsA)
+        vec: list[int] = []
+        for lvl in range(d):
+            dist = _max_dep_distance(oa, ob, loopsA, loopsB, lvl,
+                                     fixed=tuple(enumerate(vec)))
+            if dist is None:
+                if lvl == 0:
+                    return None  # no aliasing at all
+                raise TransformError(
+                    f"lexmax distance infeasible at level {lvl} under its "
+                    f"own attained prefix {vec} ({oa!r} / {ob!r})")
+            vec.append(dist)
+        return tuple(vec)
+
     def _shift_for(self, loopsA, loopsB, pairs) -> Optional[list[int]]:
-        """The minimum legal (componentwise, nonnegative) consumer shift, or
-        None when fusion stays illegal / undecidable."""
+        """The lexicographic-minimum legal consumer shift, or None when
+        fusion stays illegal / undecidable.
+
+        Legality is ``va <=lex vb + sigma`` for every aliasing pair, i.e.
+        ``sigma >=lex`` every dependence-distance vector — the minimum such
+        sigma (lex order is total) is the lex-maximum distance vector over
+        all pairs.  Unlike the componentwise per-level maxima this never
+        overshoots correlated distances (e.g. a pair whose big inner
+        distance only occurs alongside a smaller outer one), so inner
+        components may come out negative (consumer runs ahead at that
+        level); ``_build`` peels the corresponding B-side head.  A hazard
+        at zero shift guarantees some distance ``>lex 0``, so the leading
+        component is always nonnegative."""
         d = len(loopsA)
         try:
             if not any(_fusion_hazard(oa, ob, loopsA, loopsB)
                        for oa, ob in pairs):
-                return [0] * d  # zero shift already legal (exact, handles
-                # correlated distances the per-level maxima would overshoot)
+                return [0] * d  # zero shift already legal
             if not self.enable_shift:
                 return None
-            shift = [0] * d
+            best: Optional[tuple] = None
             for oa, ob in pairs:
-                for lvl in range(d):
-                    dist = _max_dep_distance(oa, ob, loopsA, loopsB, lvl)
-                    if dist is not None:
-                        shift[lvl] = max(shift[lvl], dist)
-            # the componentwise maxima bound every distance vector, hence
-            # bound it lexicographically — but re-verify exactly
+                vec = self._lexmax_distance(oa, ob, loopsA, loopsB)
+                if vec is not None and (best is None or vec > best):
+                    best = vec
+            if best is None:
+                return None
+            shift = list(best)
+            # re-verify the exact shifted hazard ILP before fusing
             if any(_fusion_hazard(oa, ob, loopsA, loopsB, shift)
                    for oa, ob in pairs):
                 return None
@@ -921,13 +1152,14 @@ class ToSPSC(Pass):
     """``to_spsc`` as a pass (multi-consumer arrays become SPSC chains)."""
 
     name = "to_spsc"
+    tag = "spsc"
 
     def apply(self, p: Program) -> Program:
         return to_spsc(p)
 
 
 # ---------------------------------------------------------------------------
-# Registry (the DSE driver and tests iterate over this)
+# Registries (the DSE driver, the pipeline parser and tests iterate these)
 # ---------------------------------------------------------------------------
 
 TRANSFORMS: dict[str, Callable[..., Pass]] = {
@@ -937,4 +1169,13 @@ TRANSFORMS: dict[str, Callable[..., Pass]] = {
     "array_partition": ArrayPartition,
     "fuse_producer_consumer": FuseProducerConsumer,
     "to_spsc": ToSPSC,
+}
+
+# Textual pipeline syntax (pipeline_parse): tag -> Pass class.  Every class
+# implements params()/build() so a pipeline string round-trips through
+# parse_pipeline/print_pipeline.
+PASS_TAGS: dict[str, type] = {
+    cls.tag: cls
+    for cls in (Normalize, LoopUnroll, LoopTile, ArrayPartition,
+                FuseProducerConsumer, ToSPSC)
 }

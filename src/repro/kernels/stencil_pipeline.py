@@ -10,11 +10,12 @@ in VMEM, and immediately consumes it (conv-y) — the intermediate array never
 touches HBM.
 
 The block/halo configuration comes from a DSE sweep (``stencil_dse_config``):
-``autotune.explore`` shift-and-peel-fuses the mismatched-bounds blur chain
-(``programs.blur_chain``) and the winning fusion's row shift IS the halo; a
-winning tiling of the fused row loop sets ``block_rows``.  The older fixed
-probe (``ilp_halo_rows``) is kept only as the fallback when the sweep finds
-no shifted fusion.
+``hls.compile`` shift-and-peel-fuses the mismatched-bounds blur chain
+(``programs.blur_chain``) and the knee point of the resulting latency x BRAM
+Pareto frontier supplies both values — the fusion's row shift IS the halo,
+the knee's tiling of the fused row loop sets ``block_rows``.  The older
+fixed probe (``ilp_halo_rows``) is kept only as the fallback when the sweep
+finds no shifted fusion.
 
 This module owns the single implementation; ``repro.kernels.ops`` re-exports
 it (they used to diverge on the ``interpret`` default).
@@ -99,7 +100,7 @@ def ilp_halo_rows(taps: int = 3) -> int:
     nest, and ``FuseProducerConsumer`` (equal-bounds mode, with an exact ILP
     legality proof) collapses them into the single producer nest whose RAW
     edges on ``mid`` carry the halo."""
-    from repro.core import compile_program
+    from repro.core.autotune import compile_program
     from repro.core.ir import ProgramBuilder
     from repro.core.transforms import (FuseProducerConsumer, Normalize,
                                        PassManager)
@@ -147,30 +148,44 @@ _CONFIG_SOURCE: dict[tuple[int, int], str] = {}
 
 
 def _stencil_dse_sweep(taps: int, n: int) -> tuple[int, int]:
-    """Run the explore() sweep and read the config off the winning fusion;
-    raises RuntimeError when the sweep finds no shifted fusion of bx."""
-    from repro.core import explore
+    """Run the hls.compile Pareto sweep and read the config off the
+    frontier's knee point; raises RuntimeError when no frontier point
+    shift-fused bx."""
+    from repro.core import hls
     from repro.core.programs import blur_chain
     from repro.core.transforms import LoopTile
 
-    p = blur_chain(n, storage="reg", taps=taps)
-    r = explore(p, verify=True, max_candidates=6, unroll_factors=(),
-                tile_sizes=(4,))
-    best_fused = None
-    halo = None
-    for c in sorted(r.candidates, key=lambda c: c.latency):
+    # bram storage so the tile-window footprint term differentiates block
+    # sizes; the partition move is excluded — full partitioning is a knob
+    # the kernel's VMEM line buffer cannot express
+    p = blur_chain(n, storage="bram", taps=taps)
+    r = hls.compile(
+        p,
+        objectives=(hls.minimize("latency"), hls.minimize("bram")),
+        search=hls.SearchConfig(moves=("fuse", "tile"), unroll_factors=(),
+                                tile_sizes=(2, 4), max_candidates=8))
+
+    def row_shift(c):
         for entry in getattr(c.program, "_fusion_log", []):
             if "bx" in entry["arrays"] and entry["shift"][0] > 0:
-                best_fused, halo = c, entry["shift"][0]
-                break
-        if best_fused is not None:
-            break
-    if best_fused is None:
-        raise RuntimeError("DSE sweep found no shifted fusion of bx")
+                return entry["shift"][0]
+        return None
+
+    fused = [c for c in r.frontier if row_shift(c) is not None]
+    if not fused:
+        raise RuntimeError("DSE sweep found no shifted fusion of bx on the "
+                           "frontier")
+    # knee of the latency x BRAM trade-off among the fused frontier points:
+    # the fusion's row shift IS the line-buffer halo, a tiling of the fused
+    # row loop sets the row-block size
+    knee = r.knee("latency", "bram", among=fused)
+    halo = row_shift(knee)
     block_rows = 8
-    for ps in best_fused.passes:
-        if isinstance(ps, LoopTile) and ps.sizes:
-            block_rows = max(ps.sizes.values())
+    for ps in knee.passes:
+        if isinstance(ps, LoopTile):
+            sizes = ps.seq if ps.seq is not None else tuple(ps.sizes.values())
+            if sizes:
+                block_rows = max(sizes)
     return block_rows, halo
 
 
@@ -178,15 +193,18 @@ def _stencil_dse_sweep(taps: int, n: int) -> tuple[int, int]:
 def stencil_dse_config(taps: int = 3, n: int = 8) -> tuple[int, int]:
     """(block_rows, halo) for ``stencil_pipeline``, produced by a DSE sweep.
 
-    ``autotune.explore`` searches transform pipelines over the
-    mismatched-bounds blur chain; the best candidate that shift-and-peel
-    fused the intermediate ``bx`` supplies the config: the fusion's row
-    shift (recorded in the program's ``_fusion_log``) is exactly the number
-    of producer rows the consumer must trail by — the line-buffer halo — and
-    a tiling of the fused row loop, when the sweep found one profitable,
-    sets the row-block size.  Falls back to the fixed ``ilp_halo_rows``
-    probe if the sweep yields no shifted fusion; ``stencil_config_source``
-    reports which path produced the values."""
+    ``hls.compile`` explores transform pipelines over the mismatched-bounds
+    blur chain and returns the Pareto frontier over (latency, BRAM, ...);
+    the knee point of the latency x BRAM curve among the candidates that
+    shift-and-peel fused the intermediate ``bx`` supplies the config: the
+    fusion's row shift (recorded in the program's ``_fusion_log``) is
+    exactly the number of producer rows the consumer must trail by — the
+    line-buffer halo — and that point's tiling of the fused row loop sets
+    the row-block size (the tile-window footprint term is what makes block
+    sizes trade BRAM for control, so the knee picks ``block_rows`` for
+    real).  Falls back to the fixed ``ilp_halo_rows`` probe if the sweep
+    yields no shifted fusion; ``stencil_config_source`` reports which path
+    produced the values."""
     try:
         cfg = _stencil_dse_sweep(taps, n)
         _CONFIG_SOURCE[(taps, n)] = "dse"

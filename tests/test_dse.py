@@ -8,7 +8,8 @@ must pass the brute-force schedule validator + timed-execution oracle
 """
 import pytest
 
-from repro.core import compile_program, explore
+from repro.core.api import explore
+from repro.core.autotune import compile_program
 from repro.core.programs import harris, two_mm, unsharp
 
 
@@ -71,6 +72,72 @@ def test_explore_enumerates_shifted_fusion():
     assert best_fused.within_budget
     assert best_fused.latency < r.baseline.latency
     assert r.best.latency <= best_fused.latency
+
+
+def test_tiling_is_not_resource_neutral():
+    """The tile-window footprint term (DESIGN.md §6): a nest-local
+    intermediate of an explicitly tiled nest is costed at its streamed
+    window, so (a) tiling changes the resource vector at all, (b) different
+    tile sizes cost differently — the knob the DSE uses to pick block_rows
+    for real."""
+    from repro.core.dataflow import resources, tile_window_elems
+    from repro.core.programs import blur_chain
+    from repro.core.transforms import (FuseProducerConsumer, LoopTile,
+                                       PassManager)
+    from repro.core.autotune import compile_program
+
+    p = blur_chain(8, storage="bram")
+    fused = PassManager([FuseProducerConsumer()], verify=True).run(p)
+    core_iv = next(it.ivname for it in fused.body if not it.peel)
+    r_untiled = resources(fused, compile_program(fused), "ours")
+    by_size = {}
+    for s in (2, 4):
+        q = PassManager([LoopTile({core_iv: s})], verify=True).run(fused)
+        # window = (block + halo) rows x full width; halo = taps - 1 = 2
+        assert tile_window_elems(q) == {"bx": (s + 2) * 8}
+        by_size[s] = resources(q, compile_program(q), "ours")
+    assert by_size[2] != r_untiled and by_size[4] != r_untiled
+    assert by_size[2] != by_size[4]
+    assert by_size[2]["bram_bytes"] < by_size[4]["bram_bytes"] \
+        < r_untiled["bram_bytes"]
+    # untiled programs are untouched by the footprint term
+    assert tile_window_elems(p) == {}
+
+
+def test_frontier_point_differs_by_tile_size():
+    """At least one Pareto frontier point must differ from another by its
+    tile size (the ISSUE acceptance for the VMEM/BRAM footprint term), and
+    the tiled point must be strictly cheaper in BRAM."""
+    from repro.core import hls
+    from repro.core.programs import blur_chain
+    from repro.core.transforms import LoopTile
+
+    p = blur_chain(8, storage="bram")
+    r = hls.compile(p, search=hls.SearchConfig(
+        moves=("fuse", "tile"), unroll_factors=(), tile_sizes=(2, 4),
+        max_candidates=8))
+
+    def tile_sizes_of(c):
+        out = []
+        for ps in c.passes:
+            if isinstance(ps, LoopTile):
+                out += list(ps.seq or ps.sizes.values())
+        return tuple(out)
+
+    tiled = [c for c in r.frontier if tile_sizes_of(c)]
+    untiled = [c for c in r.frontier if not tile_sizes_of(c)]
+    assert tiled and untiled, [c.desc for c in r.frontier]
+    assert min(c.res["bram_bytes"] for c in tiled) < \
+        min(c.res["bram_bytes"] for c in untiled)
+    # the stencil kernel config reads its block_rows off this exact knob,
+    # via the knee point, with the old signature unchanged
+    from repro.kernels.stencil_pipeline import (stencil_config_source,
+                                                stencil_dse_config)
+    block_rows, halo = stencil_dse_config()
+    assert stencil_config_source() == "dse"
+    assert halo == 2
+    assert block_rows in tile_sizes_of(r.knee("latency", "bram",
+                                              among=tiled))
 
 
 def test_metadata_only_candidates_share_pair_enumeration():

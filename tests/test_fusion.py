@@ -21,7 +21,7 @@ Full-size variants run under ``-m slow`` (weekly CI).
 import numpy as np
 import pytest
 
-from repro.core import compile_program
+from repro.core.autotune import compile_program
 from repro.core.ir import ProgramBuilder
 from repro.core.programs import CHAIN_BENCHMARKS
 from repro.core.sim import (make_inputs, sequential_exec, timed_exec,
@@ -29,14 +29,18 @@ from repro.core.sim import (make_inputs, sequential_exec, timed_exec,
 from repro.core.transforms import (FuseProducerConsumer, PassManager,
                                    differential_check)
 
-_SMALL = {"blur_chain": 8, "conv_pool": 8, "gradient_harris": 6}
+_SMALL = {"blur_chain": 8, "conv_pool": 8, "gradient_harris": 6,
+          "correlated_chain": 8}
 
 # the minimum legal shift of each chain (independent of n for finite-shift
 # chains — that is what makes them fusable — except conv_pool's rate
-# mismatch, whose shift is n/2)
+# mismatch, whose shift is n/2).  correlated_chain pins the LEXICOGRAPHIC
+# minimum: distances (2,0) and (0,5) must shift by their lex-max (2,0),
+# not the componentwise maxima (2,5).
 _EXPECT_SHIFT = {"blur_chain": lambda n: [2, 0],
                  "conv_pool": lambda n: [n // 2, n // 2],
-                 "gradient_harris": lambda n: [2, 2]}
+                 "gradient_harris": lambda n: [2, 2],
+                 "correlated_chain": lambda n: [2, 0]}
 
 
 def _bit_exact(p, q, seed=0):
@@ -89,6 +93,37 @@ def test_noshift_variant_cannot_fuse_chains():
     for name, mk in CHAIN_BENCHMARKS.items():
         p = mk(_SMALL[name])
         assert FuseProducerConsumer(enable_shift=False).apply(p) is p, name
+
+
+def test_lexicographic_shift_beats_componentwise():
+    """correlated_chain's distance vectors are (2,0) and (0,5): the lex
+    shift fuses at (2,0) whose fused core covers the FULL consumer column
+    range; the componentwise maxima (2,5) would also be legal but delay
+    every row by 5 columns.  The lex fusion must (a) record shift [2,0],
+    (b) stay bit-exact, and (c) schedule no slower than a fusion forced to
+    the componentwise shift would."""
+    from repro.core.programs import correlated_chain
+    from repro.core.transforms import _fusion_hazard, _perfect_chain
+
+    p = correlated_chain(8)
+    q = PassManager([FuseProducerConsumer()], verify=True).run(p)
+    assert q is not p
+    assert q._fusion_log[0]["shift"] == [2, 0]
+    # full-column core: no column peel at the inner level
+    assert q._fusion_log[0]["core_trips"] == [8, 8]
+    _bit_exact(p, q)
+    # the componentwise shift (2, 5) is ALSO legal (it over-covers) — prove
+    # the overshoot is real and that the lex choice is the smaller one
+    a, b = p.body
+    loopsA, _ = _perfect_chain(a)
+    loopsB, _ = _perfect_chain(b)
+    pairs = FuseProducerConsumer()._candidate(a, b)[2]
+    assert not any(_fusion_hazard(oa, ob, loopsA, loopsB, [2, 5])
+                   for oa, ob in pairs)
+    assert not any(_fusion_hazard(oa, ob, loopsA, loopsB, [2, 0])
+                   for oa, ob in pairs)
+    assert any(_fusion_hazard(oa, ob, loopsA, loopsB, [1, 99])
+               for oa, ob in pairs)
 
 
 def test_two_mm_unprofitable_shift_is_refused():

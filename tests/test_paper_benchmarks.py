@@ -3,7 +3,7 @@ functional equivalence, and the qualitative paper claims."""
 import numpy as np
 import pytest
 
-from repro.core import compile_program
+from repro.core.autotune import compile_program
 from repro.core.dataflow import (analyze_dataflow, to_spsc,
                                  vitis_dataflow_latency)
 from repro.core.programs import BENCHMARKS, dus, harris, two_mm, unsharp

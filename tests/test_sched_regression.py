@@ -5,7 +5,8 @@ The expected values below were captured by running the pre-optimization
 (seed) implementation; any drift means the rewrite changed a computed
 schedule, which the perf work must never do.
 """
-from repro.core import compile_program, pipeline_ilp as pp
+from repro.core import pipeline_ilp as pp
+from repro.core.autotune import compile_program
 from repro.core.programs import fig3_conv1d, unsharp
 
 

@@ -2,7 +2,8 @@
 import numpy as np
 import pytest
 
-from repro.core import compile_program, emit_hir, schedule
+from repro.core import emit_hir, schedule
+from repro.core.autotune import compile_program
 from repro.core.deps import DepAnalysis
 from repro.core.programs import fig1_conv_chain, fig3_conv1d
 from repro.core.sim import (make_inputs, sequential_exec, timed_exec,

@@ -10,7 +10,7 @@ compositions.  Full-size corpus runs are ``-m slow``.
 import numpy as np
 import pytest
 
-from repro.core import compile_program
+from repro.core.autotune import compile_program
 from repro.core.ir import Loop, Program, ProgramBuilder, StoreOp
 from repro.core.programs import BENCHMARKS
 from repro.core.sim import (make_inputs, sequential_exec, timed_exec,
