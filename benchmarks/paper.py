@@ -347,3 +347,155 @@ def fig10(res: dict) -> list[tuple]:
         rows.append((name, 0.0,
                      round(r["loop_only_orig"] / r["ours_orig"], 3)))
     return rows
+
+
+# ---------------------------------------------------------------------------
+# Serving-scale DSE perf: persistent cache + parallel expansion (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+# Cold/warm/parallel wall-clock of the hls.compile Pareto search over a
+# fresh persistent store, next to the other BENCH_*.json snapshots.
+DSE_PERF_JSON = os.path.join(os.path.dirname(__file__), os.pardir,
+                             "BENCH_dse_perf.json")
+
+# The CI gate (weekly job): warm-over-cold speedup floor per program, and
+# the frontier must keep dominating the greedy explore() winner.
+WARM_SPEEDUP_FLOOR = 5.0
+PARALLEL_SPEEDUP_FLOOR = 2.0   # enforced only on machines with >= 4 cores
+
+
+def _frontier_sig(r) -> list:
+    """Everything observable about a frontier point, schedule included —
+    cold, warm and parallel runs must agree on this exactly."""
+    return [(c.desc, c.latency,
+             {k: c.res[k] for k in ("bram_bytes", "dsp", "ff_bits")},
+             sorted(c.schedule.iis.values()),
+             sorted(c.schedule.theta.values()))
+            for c in r.frontier]
+
+
+def compute_dse_perf(storage: str = "bram", force: bool = False,
+                     jobs: int = 4) -> dict:
+    """Serving-scale DSE benchmark (DESIGN.md §8): for every
+    mismatched-bounds chain plus harris/optical_flow/two_mm, time the
+    hls.compile Pareto search (a) cold against a fresh persistent store,
+    (b) warm against the store the cold run just filled, and (c) with the
+    expansion waves fanned across ``jobs`` worker processes (store off, so
+    it measures parallel compile, not cache hits).  Frontiers must be
+    byte-identical across all three runs and must keep dominating the
+    greedy explore() oracle; the warm run must clear
+    ``WARM_SPEEDUP_FLOOR``.  Results go to ``BENCH_dse_perf.json``."""
+    cache = {}
+    if os.path.exists(DSE_PERF_JSON):
+        cache = json.load(open(DSE_PERF_JSON))
+    if storage in cache and not force:
+        return cache[storage]
+
+    import shutil
+    import tempfile
+
+    from repro.core import hls
+    from repro.core.autotune import _greedy_explore, dominates
+    from repro.core.programs import (CHAIN_BENCHMARKS, harris, optical_flow,
+                                     two_mm)
+
+    progs = {**CHAIN_BENCHMARKS, "harris": harris,
+             "optical_flow": optical_flow, "two_mm": two_mm}
+    # hermetic: the bench always starts from an empty store in a tmpdir —
+    # a warm ~/.cache/repro-hls must not fake the cold numbers
+    saved = {k: os.environ.get(k)
+             for k in ("REPRO_HLS_CACHE", "REPRO_HLS_CACHE_DIR")}
+    tmp = tempfile.mkdtemp(prefix="repro-hls-bench-")
+    os.environ["REPRO_HLS_CACHE"] = "1"
+    os.environ["REPRO_HLS_CACHE_DIR"] = tmp
+    out = {}
+    try:
+        for name, mk in progs.items():
+            n = _PARETO_SIZES.get(name, 8)
+
+            def run(use_cache: bool, use_jobs: int = 1):
+                t0 = time.time()
+                r = hls.compile(mk(n, storage=storage),
+                                search=hls.SearchConfig(
+                                    max_candidates=16, jobs=use_jobs,
+                                    cache=use_cache))
+                return r, time.time() - t0
+
+            cold_r, cold_s = run(True)
+            warm_r, warm_s = run(True)
+            par_r, par_s = run(False, use_jobs=jobs)
+            greedy = _greedy_explore(mk(n, storage=storage),
+                                     max_candidates=16)
+            gv = greedy.best.objectives()
+
+            sig = _frontier_sig(cold_r)
+            rec = {
+                "n": n,
+                "cold_seconds": round(cold_s, 3),
+                "warm_seconds": round(warm_s, 3),
+                "parallel_seconds": round(par_s, 3),
+                "warm_speedup": round(cold_s / max(warm_s, 1e-9), 1),
+                "parallel_speedup": round(cold_s / max(par_s, 1e-9), 2),
+                "parallel_jobs": jobs,
+                "cpu_count": os.cpu_count(),
+                "compiles_to_frontier": cold_r.compiles,
+                "frontier_size": len(cold_r.frontier),
+                "warm_cache_hits": sum(c.cached for c in warm_r.candidates),
+                "frontier_identical_warm": _frontier_sig(warm_r) == sig,
+                "frontier_identical_parallel": _frontier_sig(par_r) == sig,
+                "dominates_greedy": bool(any(
+                    dominates(c.objectives(), gv) or c.objectives() == gv
+                    for c in cold_r.frontier)),
+            }
+            out[name] = rec
+            if not (rec["frontier_identical_warm"]
+                    and rec["frontier_identical_parallel"]):
+                raise RuntimeError(
+                    f"dse-perf: '{name}' frontier differs across "
+                    f"cold/warm/parallel runs — the cache or the parallel "
+                    f"merge broke determinism")
+            if rec["warm_speedup"] < WARM_SPEEDUP_FLOOR:
+                raise RuntimeError(
+                    f"dse-perf: '{name}' warm-cache speedup "
+                    f"{rec['warm_speedup']}x is under the "
+                    f"{WARM_SPEEDUP_FLOOR}x floor "
+                    f"(cold {cold_s:.2f}s, warm {warm_s:.2f}s)")
+            if not rec["dominates_greedy"]:
+                raise RuntimeError(
+                    f"dse-perf: frontier of '{name}' no longer contains a "
+                    f"point dominating-or-equal the greedy winner {gv}")
+            if ((os.cpu_count() or 1) >= 4
+                    and rec["parallel_speedup"] < PARALLEL_SPEEDUP_FLOOR):
+                raise RuntimeError(
+                    f"dse-perf: '{name}' jobs={jobs} speedup "
+                    f"{rec['parallel_speedup']}x is under the "
+                    f"{PARALLEL_SPEEDUP_FLOOR}x floor on a "
+                    f"{os.cpu_count()}-core machine")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+        for k, v in saved.items():
+            if v is None:
+                os.environ.pop(k, None)
+            else:
+                os.environ[k] = v
+    cache[storage] = out
+    json.dump(cache, open(DSE_PERF_JSON, "w"), indent=1)
+    return out
+
+
+def dse_perf_table(res: dict) -> list[tuple]:
+    """Warm/parallel speedups + search effort, per program."""
+    rows = []
+    for name, r in res.items():
+        rows.append((f"{name}.warm_speedup", r["cold_seconds"] * 1e6,
+                     r["warm_speedup"]))
+        rows.append((f"{name}.parallel_speedup", r["parallel_seconds"] * 1e6,
+                     r["parallel_speedup"]))
+        rows.append((f"{name}.compiles_to_frontier", 0.0,
+                     r["compiles_to_frontier"]))
+        rows.append((f"{name}.frontier_identical", 0.0,
+                     int(r["frontier_identical_warm"]
+                         and r["frontier_identical_parallel"])))
+        rows.append((f"{name}.dominates_greedy", 0.0,
+                     int(r["dominates_greedy"])))
+    return rows

@@ -22,6 +22,8 @@ from .transforms import (ArrayPartition, FuseProducerConsumer, LoopTile,
 from .pipeline_parse import (PipelineSyntaxError, parse_pipeline,
                              print_pipeline)
 from .dataflow import ResourceVector
+from .cache import (SCHEDULER_SALT, CacheStore, cache_enabled, fingerprint,
+                    get_store, pack_schedule, program_text, unpack_schedule)
 from .autotune import (DSECandidate, DSEResult, MOVE_FAMILIES, PARETO_METRICS,
                        ParetoResult, autotune, dominates, pareto_explore)
 from . import api as hls
@@ -37,7 +39,10 @@ __all__ = [
     "Normalize", "LoopUnroll", "LoopTile", "ArrayPartition",
     "FuseProducerConsumer", "ToSPSC", "to_spsc", "differential_check",
     "parse_pipeline", "print_pipeline", "PipelineSyntaxError",
-    "ResourceVector", "autotune", "DSECandidate", "DSEResult",
+    "ResourceVector", "SCHEDULER_SALT", "CacheStore", "cache_enabled",
+    "fingerprint", "get_store", "pack_schedule", "program_text",
+    "unpack_schedule",
+    "autotune", "DSECandidate", "DSEResult",
     "pareto_explore", "ParetoResult", "dominates", "PARETO_METRICS",
     "MOVE_FAMILIES",
     "hls", "CompileSpec", "CompileResult", "Target", "Objective",

@@ -176,7 +176,15 @@ class SearchConfig:
     """Knobs of the Pareto search (ignored when the spec fixes a
     pipeline).  ``moves`` selects move families out of
     ``autotune.MOVE_FAMILIES``; ``validate`` additionally runs the
-    brute-force schedule/execution oracles on the selected best point."""
+    brute-force schedule/execution oracles on the selected best point.
+
+    ``selector`` picks the expansion-base policy ("latency" = classic
+    lowest-latency-first, "hv" = hypervolume-contribution over
+    archive-normalized objectives); ``macro_moves`` adds composite
+    fuse>tile / fuse>unroll single-step moves; ``jobs`` fans candidate
+    compiles within one expansion wave across a process pool (results are
+    bit-identical to serial); ``cache`` enables the persistent compile
+    cache (also gated globally by ``REPRO_HLS_CACHE``)."""
 
     moves: tuple[str, ...] = MOVE_FAMILIES
     unroll_factors: tuple[int, ...] = (2, 4)
@@ -185,6 +193,10 @@ class SearchConfig:
     verify: bool = True
     validate: bool = False
     seeds: tuple[int, ...] = (0,)
+    selector: str = "latency"
+    macro_moves: bool = False
+    jobs: int = 1
+    cache: bool = True
 
 
 @dataclass(frozen=True)
@@ -238,6 +250,10 @@ class CompileResult:
     candidates: list[DesignPoint] = field(default_factory=list)
     rejected: list[tuple[str, str]] = field(default_factory=list)
     caps: dict[str, float] = field(default_factory=dict)
+    #: candidate evaluations charged against SearchConfig.max_candidates —
+    #: invariant between cold and warm-cache runs (a cache hit still counts;
+    #: it answers "how much search reached this frontier", not "how much CPU")
+    compiles: int = 0
 
     @property
     def schedule(self):
@@ -290,11 +306,12 @@ class CompileResult:
                         key=lambda c: (id(c) not in order,
                                        order.get(id(c), 0), c.desc)):
             mark = " <- best" if c is self.best else ""
+            src = " {cache hit}" if c.cached else ""
             lines.append(
                 f"  {c.desc}: latency={c.latency} " +
                 " ".join(f"{k}={c.res[k]:g}"
                          for k in ("bram_bytes", "dsp", "ff_bits")) +
-                f" [{c.status or 'ok'}]{mark}")
+                f" [{c.status or 'ok'}]{src}{mark}")
         for desc, reason in self.rejected:
             if not any(c.desc == desc for c in self.candidates):
                 lines.append(f"  {desc}: [{reason}]")
@@ -379,9 +396,11 @@ def compile(program: Program, spec: Optional[CompileSpec] = None, *,
         for ps in passes:
             if not isinstance(ps, Pass):
                 raise TypeError(f"pipeline element is not a Pass: {ps!r}")
+        from .cache import get_store
+        store = get_store() if sc.cache else None
         baseline = measure_candidate(program, "baseline", [],
                                      verify=sc.verify, seeds=sc.seeds,
-                                     mode=spec.target.mode)
+                                     mode=spec.target.mode, store=store)
         baseline.status = "baseline"
         for k, scale in rel.items():
             ceil = scale * baseline.res[k]
@@ -390,7 +409,7 @@ def compile(program: Program, spec: Optional[CompileSpec] = None, *,
             point = measure_candidate(program, print_pipeline(passes), passes,
                                       verify=sc.verify, seeds=sc.seeds,
                                       mode=spec.target.mode,
-                                      incremental=False)
+                                      incremental=False, store=store)
             if point is None:   # the WHOLE pipeline applied nothing
                 point = baseline
         else:
@@ -413,20 +432,22 @@ def compile(program: Program, spec: Optional[CompileSpec] = None, *,
         return CompileResult(program=program, spec=spec, baseline=baseline,
                              best=point, frontier=frontier,
                              candidates=candidates, rejected=rejected,
-                             caps=caps)
+                             caps=caps, compiles=len(candidates))
 
     r: ParetoResult = pareto_explore(
         program, caps=caps, rel_caps=rel, moves=sc.moves,
         unroll_factors=sc.unroll_factors, tile_sizes=sc.tile_sizes,
         max_candidates=sc.max_candidates, verify=sc.verify, seeds=sc.seeds,
-        mode=spec.target.mode, verbose=verbose)
+        mode=spec.target.mode, selector=sc.selector,
+        macro_moves=sc.macro_moves, jobs=sc.jobs,
+        store="auto" if sc.cache else None, verbose=verbose)
     best = _select_best(r.frontier, r.baseline, spec)
     if sc.validate:
         validate_candidate(best, sc.seeds)
     return CompileResult(program=program, spec=spec, baseline=r.baseline,
                          best=best, frontier=r.frontier,
                          candidates=r.candidates, rejected=r.rejected,
-                         caps=r.caps)
+                         caps=r.caps, compiles=r.compiles)
 
 
 # ---------------------------------------------------------------------------

@@ -24,14 +24,17 @@ on as deprecated shims there.
 """
 from __future__ import annotations
 
+import heapq
 from dataclasses import dataclass, field
-from typing import Optional, Sequence
+from typing import Optional, Sequence, Union
 
+from .cache import (CacheStore, fingerprint, get_store, pack_schedule,
+                    unpack_schedule)
 from .deps import DepAnalysis
 from .ir import Loop, Program
 from .scheduler import Schedule, check_loop_occupancy, feasible, schedule
 from .transforms import (ArrayPartition, FuseProducerConsumer, LoopTile,
-                         LoopUnroll, Pass, PassManager)
+                         LoopUnroll, Pass, PassManager, TransformError)
 
 
 def _loops_with_depth(p: Program) -> list[tuple[Loop, int]]:
@@ -139,11 +142,20 @@ class DSECandidate:
     within_budget: bool
     status: str = ""              # "baseline" | "frontier" | "dominated by
     #                               <desc>" | "over budget: <violations>"
+    cached: bool = False          # rehydrated from the persistent cache
+    _obj: Optional[tuple] = field(default=None, repr=False, compare=False)
 
     def metric(self, key: str) -> float:
         return float(self.latency) if key == "latency" else float(self.res[key])
 
     def objectives(self, keys: Sequence[str] = PARETO_METRICS) -> tuple:
+        # latency/res are fixed at construction, so the default objective
+        # tuple is computed once — every archive dominance check used to
+        # recompute it (part of the O(n^2 log n) requeue hot spot)
+        if keys is PARETO_METRICS:
+            if self._obj is None:
+                self._obj = tuple(self.metric(k) for k in keys)
+            return self._obj
         return tuple(self.metric(k) for k in keys)
 
 
@@ -227,12 +239,93 @@ def _tile_moves(p: Program, sizes: Sequence[int]) -> list[LoopTile]:
     return moves
 
 
+def _pipeline_text(passes: Sequence[Pass]) -> Optional[str]:
+    """The textual form of ``passes`` for cache keys, or None when a pass
+    falls outside the textual grammar (then the candidate is uncacheable)."""
+    from .pipeline_parse import print_pipeline
+    try:
+        return print_pipeline(list(passes))
+    except Exception:
+        return None
+
+
+def _candidate_key(p: Program, all_passes: Sequence[Pass], mode: str,
+                   incremental: bool, n_new: int) -> Optional[str]:
+    """Persistent-cache key of one candidate measurement: the program
+    fingerprint x full pipeline text x resource mode, plus the no-op
+    detection flavor (it decides whether the entry means None)."""
+    text = _pipeline_text(all_passes)
+    if text is None:
+        return None
+    return fingerprint(p, pipeline=text, mode=mode,
+                       extra=f"cand;inc={int(bool(incremental))};new={n_new}")
+
+
+def _rehydrate_candidate(entry: dict, p: Program, desc: str,
+                         passes: Sequence[Pass], start: Program,
+                         base_passes: Sequence[Pass], verify: bool,
+                         incremental: bool) -> Optional[DSECandidate]:
+    """Rebuild a DSECandidate from a cache entry by re-applying the passes
+    (cheap: no differential check) and unpacking the stored schedule onto
+    the result.  Raises ValueError when the entry does not fit this program
+    — the caller then treats it as a miss and recompiles."""
+    from .dataflow import ResourceVector
+
+    if entry.get("noop"):
+        return None
+    if verify and not entry.get("verified"):
+        raise ValueError("cached entry was never differentially verified")
+    pm = PassManager(passes, verify=False)
+    q = pm.run(start)
+    if passes and (q is start or
+                   (incremental and not pm.reports[-1].changed)):
+        raise ValueError("cached entry disagrees: pass application no-ops")
+    s = unpack_schedule(q, entry["schedule"])
+    return DSECandidate(
+        desc=desc or "baseline", passes=tuple(base_passes) + tuple(passes),
+        program=q, schedule=s, latency=int(entry["latency"]),
+        res=ResourceVector(**entry["res"]), within_budget=True, cached=True)
+
+
+def _probe_candidate_cache(store: Optional[CacheStore], key: Optional[str],
+                           p: Program, desc: str, passes: Sequence[Pass],
+                           start: Program, base_passes: Sequence[Pass],
+                           verify: bool, incremental: bool):
+    """(hit, candidate_or_None).  Never compiles; a stale or unverified
+    entry reads as a miss."""
+    if store is None or key is None:
+        return False, None
+    entry = store.get(key)
+    if entry is None:
+        return False, None
+    try:
+        return True, _rehydrate_candidate(entry, p, desc, passes, start,
+                                          base_passes, verify, incremental)
+    except (ValueError, KeyError, TypeError):
+        return False, None
+
+
+def _store_candidate(store: Optional[CacheStore], key: Optional[str],
+                     c: Optional[DSECandidate], verify: bool) -> None:
+    if store is None or key is None:
+        return
+    if c is None:
+        store.put(key, {"noop": True})
+        return
+    store.put(key, {"noop": False, "verified": bool(verify),
+                    "latency": int(c.latency),
+                    "res": {k: float(v) for k, v in c.res.items()},
+                    "schedule": pack_schedule(c.schedule)})
+
+
 def measure_candidate(p: Program, desc: str, passes: Sequence[Pass], *,
                       base: Optional[Program] = None,
                       base_passes: Sequence[Pass] = (),
                       verify: bool = True, seeds: Sequence[int] = (0,),
                       mode: str = "ours",
-                      incremental: bool = True) -> Optional[DSECandidate]:
+                      incremental: bool = True,
+                      store: Optional[CacheStore] = None
+                      ) -> Optional[DSECandidate]:
     """Apply ``passes`` on top of ``base`` (an already-verified
     intermediate, default the original program ``p``), compile, and cost.
     Incremental composition does not re-apply and re-verify the whole
@@ -244,21 +337,37 @@ def measure_candidate(p: Program, desc: str, passes: Sequence[Pass], *,
     the result would duplicate an already-measured candidate; under
     ``incremental=False`` (a caller-specified fixed pipeline) only when
     the WHOLE pipeline applied nothing — a fixed pipeline whose last pass
-    happens not to fire must still yield the earlier passes' design."""
+    happens not to fire must still yield the earlier passes' design.
+
+    ``store`` enables the persistent compile cache: a usable entry skips
+    the differential check and the scheduling ILP entirely (passes are
+    still re-applied, unverified — equivalence was discharged when the
+    entry was created, and the entry says so via its ``verified`` flag)."""
     from .dataflow import resources
 
     start = base if base is not None else p
+    key = None
+    if store is not None:
+        key = _candidate_key(p, tuple(base_passes) + tuple(passes), mode,
+                             incremental, len(tuple(passes)))
+        hit, c = _probe_candidate_cache(store, key, p, desc, passes, start,
+                                        base_passes, verify, incremental)
+        if hit:
+            return c
     pm = PassManager(passes, verify=verify, seeds=seeds)
     q = pm.run(start)
     if passes and (q is start or
                    (incremental and not pm.reports[-1].changed)):
+        _store_candidate(store, key, None, verify)
         return None
     s = compile_program(q)
     res = resources(q, s, mode)
-    return DSECandidate(
+    c = DSECandidate(
         desc=desc or "baseline", passes=tuple(base_passes) + tuple(passes),
         program=q, schedule=s, latency=s.completion_time(), res=res,
         within_budget=True)
+    _store_candidate(store, key, c, verify)
+    return c
 
 
 def validate_candidate(c: DSECandidate, seeds: Sequence[int] = (0,)) -> None:
@@ -314,6 +423,211 @@ def _single_moves(p: Program, families: Sequence[str],
     return moves
 
 
+# ---------------------------------------------------------------------------
+# Expansion-base selection: hypervolume contribution + lazy-invalidation queue
+# ---------------------------------------------------------------------------
+
+
+def _hv(points: Sequence[tuple], ref: tuple) -> float:
+    """Exact hypervolume (minimization) of the union of boxes ``[p, ref]``
+    by recursive dimension sweeping — fine for the DSE's <= ~16-point,
+    4-axis archives.  Points not strictly below ``ref`` contribute nothing."""
+    pts = sorted(p for p in points if all(x < r for x, r in zip(p, ref)))
+    if not pts:
+        return 0.0
+    if len(ref) == 1:
+        return ref[0] - pts[0][0]
+    vol = 0.0
+    for i, p in enumerate(pts):
+        hi = pts[i + 1][0] if i + 1 < len(pts) else ref[0]
+        if hi > p[0]:
+            vol += (hi - p[0]) * _hv([q[1:] for q in pts[:i + 1]], ref[1:])
+    return vol
+
+
+def _hv_contributions(archive: Sequence[DSECandidate]) -> dict[int, float]:
+    """id(candidate) -> hypervolume contribution over the archive-normalized
+    objective space (each axis scaled to the archive's [min, max] span, ref
+    1.1 per axis, so no axis's units dominate and frontier extremes always
+    contribute)."""
+    if not archive:
+        return {}
+    objs = [a.objectives() for a in archive]
+    lo = [min(col) for col in zip(*objs)]
+    hi = [max(col) for col in zip(*objs)]
+    span = [h - l if h > l else 1.0 for l, h in zip(lo, hi)]
+    pts = [tuple((x - l) / s for x, l, s in zip(o, lo, span)) for o in objs]
+    ref = tuple(1.1 for _ in lo)
+    total = _hv(pts, ref)
+    return {id(a): total - _hv(pts[:i] + pts[i + 1:], ref)
+            for i, a in enumerate(archive)}
+
+
+class _ExpansionQueue:
+    """Unexpanded archive members, pending frontier expansion.
+
+    Replaces the sort-every-iteration list (O(n^2 log n) across a run) with
+    a heap for the classic lowest-latency-first selector, or a live list
+    scanned by hypervolume contribution for ``selector="hv"``.  Dominated
+    members are invalidated *lazily*: ``insert`` only flips their status
+    and ``pop`` skips them — no O(n) ``list.remove`` on the hot path."""
+
+    SELECTORS = ("latency", "hv")
+
+    def __init__(self, selector: str = "latency"):
+        if selector not in self.SELECTORS:
+            raise ValueError(f"unknown selector {selector!r}; "
+                             f"valid: {self.SELECTORS}")
+        self.selector = selector
+        self._heap: list[tuple] = []
+        self._live: list[DSECandidate] = []
+        self._n = 0                      # insertion order = tie break
+
+    def push(self, c: DSECandidate) -> None:
+        self._n += 1
+        if self.selector == "latency":
+            heapq.heappush(self._heap,
+                           (c.latency, c.res["bram_bytes"], self._n, c))
+        else:
+            self._live.append(c)
+
+    @staticmethod
+    def _stale(c: DSECandidate) -> bool:
+        return c.status.startswith("dominated")
+
+    def pop(self, archive: Sequence[DSECandidate]) -> Optional[DSECandidate]:
+        if self.selector == "latency":
+            while self._heap:
+                *_, c = heapq.heappop(self._heap)
+                if not self._stale(c):
+                    return c
+            return None
+        self._live = [c for c in self._live if not self._stale(c)]
+        if not self._live:
+            return None
+        contrib = _hv_contributions(archive)
+        best_i, best_v = 0, None
+        for i, c in enumerate(self._live):
+            # an over-budget root is the only queued member outside the
+            # archive — it must be expanded first (it is the only base)
+            v = contrib.get(id(c), float("inf"))
+            if best_v is None or v > best_v + 1e-12:
+                best_i, best_v = i, v
+        return self._live.pop(best_i)
+
+
+def _macro_moves(base_program: Program, families: Sequence[str],
+                 unroll_factors: Sequence[int],
+                 tile_sizes: Sequence[int]) -> list[tuple[str, list[Pass]]]:
+    """Composite single-step moves: fuse the chain, then immediately tile or
+    unroll the *fused* nests — "fuse>tile{...}" / "fuse>unroll(xF)".  A
+    fuse+tile frontier point then costs ONE compile instead of two expansion
+    waves, which is what reaches deep pipelines within a tight
+    ``max_candidates`` cap.  The tile/unroll knobs are derived from a cheap
+    structural probe of the fused program (pass application only, no
+    scheduling): fused loop names are deterministic per apply, so the real
+    measurement reproduces them."""
+    if "fuse" not in families:
+        return []
+    try:
+        fused = FuseProducerConsumer().apply(base_program)
+    except TransformError:
+        return []
+    if fused is base_program:
+        return []
+    out: list[tuple[str, list[Pass]]] = []
+    if "tile" in families:
+        out += [(f"fuse>{t.name}", [FuseProducerConsumer(), t])
+                for t in _tile_moves(fused, tile_sizes)]
+    if "unroll" in families:
+        out += [(f"fuse>unroll(x{f})", [FuseProducerConsumer(), LoopUnroll(f)])
+                for f in _unroll_factors_for(fused, unroll_factors)]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Parallel wave measurement (ProcessPoolExecutor fan-out)
+# ---------------------------------------------------------------------------
+
+
+def _bump_uid_counter(p: Program) -> None:
+    """Make the process-local uid counter safe after unpickling a program:
+    nodes a worker creates must not collide with the program's existing
+    uids (a spawn-start worker's counter begins at 0)."""
+    import itertools
+
+    from . import ir
+    top = max((n.uid for n, _ in p.walk()), default=-1)
+    nxt = next(ir._uid)
+    ir._uid = itertools.count(max(top + 1, nxt + 1))
+
+
+def _measure_worker(payload: tuple) -> Optional[DSECandidate]:
+    """Pool entry point for one cold candidate measurement.  Workers never
+    touch the persistent store — the parent owns cache probing/writing, so
+    the on-disk state is single-writer per explore call."""
+    program, desc, passes, base_passes, verify, seeds, mode = payload
+    _bump_uid_counter(program)
+    return measure_candidate(program, desc, passes, base_passes=base_passes,
+                             verify=verify, seeds=seeds, mode=mode)
+
+
+_PENDING = object()   # serial-mode placeholder: measure lazily at replay
+
+
+def _measure_wave(wave: list, cur: "DSECandidate", p: Program, pool,
+                  store: Optional[CacheStore], verify: bool,
+                  seeds: Sequence[int], mode: str) -> list:
+    """Measure one expansion wave (all moves off one base), aligned with
+    ``wave``.
+
+    Serial mode (``pool`` is None) returns ``_PENDING`` placeholders so the
+    caller measures each move only after its under-cap check — exactly the
+    sequential engine's behavior.  Parallel mode probes the cache first,
+    fans the misses out across the pool, and persists the results; compiles
+    that land beyond the candidate cap are discarded at replay, so the
+    merged archive is bit-identical to a serial run.  Any pool failure
+    falls back to measuring that entry in-process."""
+    if pool is None:
+        return [_PENDING] * len(wave)
+    results: list = [None] * len(wave)
+    futs: dict[int, tuple] = {}
+    for i, (full, mvs) in enumerate(wave):
+        key = None
+        if store is not None:
+            key = _candidate_key(p, tuple(cur.passes) + tuple(mvs), mode,
+                                 True, len(mvs))
+            hit, c = _probe_candidate_cache(store, key, p, full, mvs,
+                                            cur.program, cur.passes, verify,
+                                            True)
+            if hit:
+                results[i] = c
+                continue
+        payload = (cur.program, full, list(mvs), tuple(cur.passes),
+                   verify, tuple(seeds), mode)
+        try:
+            futs[i] = (pool.submit(_measure_worker, payload), key)
+        except Exception:
+            futs[i] = (None, key)
+    for i, (fut, key) in futs.items():
+        c, ok = None, False
+        if fut is not None:
+            try:
+                c = fut.result()
+                ok = True
+            except Exception:
+                ok = False
+        if ok:
+            _store_candidate(store, key, c, verify)
+        else:
+            full, mvs = wave[i]
+            c = measure_candidate(p, full, mvs, base=cur.program,
+                                  base_passes=cur.passes, verify=verify,
+                                  seeds=seeds, mode=mode, store=store)
+        results[i] = c
+    return results
+
+
 @dataclass
 class ParetoResult:
     """Output of the Pareto-frontier DSE (wrapped by hls.CompileResult)."""
@@ -326,6 +640,71 @@ class ParetoResult:
     compiles: int
 
 
+def _search_signature(caps, rel_caps, moves, unroll_factors, tile_sizes,
+                      max_candidates, verify, seeds, selector,
+                      macro_moves) -> str:
+    """Every knob that shapes the search trajectory, for the whole-frontier
+    cache key.  ``jobs`` is deliberately absent: parallel and serial runs
+    are bit-identical by contract, so they share entries."""
+    return ("pareto"
+            f";moves={','.join(moves)}"
+            f";uf={tuple(unroll_factors)};ts={tuple(tile_sizes)}"
+            f";max={max_candidates};verify={int(bool(verify))}"
+            f";seeds={tuple(seeds)};sel={selector}"
+            f";macro={int(bool(macro_moves))}"
+            f";caps={sorted((caps or {}).items())}"
+            f";rel={sorted((rel_caps or {}).items())}")
+
+
+def _pack_pareto(r: ParetoResult, verify: bool) -> Optional[dict]:
+    """The whole ParetoResult as a JSON blob (None when any candidate's
+    pipeline falls outside the textual grammar)."""
+    cand_blobs = []
+    for c in r.candidates:
+        text = _pipeline_text(c.passes)
+        if text is None:
+            return None
+        cand_blobs.append({
+            "desc": c.desc, "pipeline": text, "status": c.status,
+            "within_budget": bool(c.within_budget), "latency": int(c.latency),
+            "res": {k: float(v) for k, v in c.res.items()},
+            "schedule": pack_schedule(c.schedule)})
+    idx = {id(c): i for i, c in enumerate(r.candidates)}
+    return {"verified": bool(verify),
+            "candidates": cand_blobs,
+            "frontier": [idx[id(c)] for c in r.frontier],
+            "rejected": [list(t) for t in r.rejected],
+            "caps": {k: float(v) for k, v in r.caps.items()},
+            "compiles": int(r.compiles)}
+
+
+def _unpack_pareto(blob: dict, p: Program) -> ParetoResult:
+    """Rehydrate a cached frontier: re-apply each candidate's pipeline
+    (unverified — equivalence was discharged on the cold run) and unpack
+    its schedule.  Raises on any structural mismatch (stale entry)."""
+    from .dataflow import ResourceVector
+    from .pipeline_parse import parse_pipeline
+
+    cands = []
+    for cb in blob["candidates"]:
+        passes = tuple(parse_pipeline(cb["pipeline"]))
+        q = PassManager(passes, verify=False).run(p) if passes else p
+        s = unpack_schedule(q, cb["schedule"])
+        cands.append(DSECandidate(
+            desc=cb["desc"], passes=passes, program=q, schedule=s,
+            latency=int(cb["latency"]), res=ResourceVector(**cb["res"]),
+            within_budget=bool(cb["within_budget"]), status=cb["status"],
+            cached=True))
+    if not cands:
+        raise ValueError("empty cached frontier")
+    return ParetoResult(
+        baseline=cands[0],
+        frontier=[cands[i] for i in blob["frontier"]],
+        candidates=cands,
+        rejected=[tuple(t) for t in blob["rejected"]],
+        caps=dict(blob["caps"]), compiles=int(blob["compiles"]))
+
+
 def pareto_explore(p: Program, *,
                    caps: Optional[dict[str, float]] = None,
                    rel_caps: Optional[dict[str, float]] = None,
@@ -336,16 +715,24 @@ def pareto_explore(p: Program, *,
                    verify: bool = True,
                    seeds: Sequence[int] = (0,),
                    mode: str = "ours",
+                   selector: str = "latency",
+                   macro_moves: bool = False,
+                   jobs: int = 1,
+                   store: Union[CacheStore, str, None] = "auto",
                    verbose: bool = False) -> ParetoResult:
-    """Pareto-frontier DSE over transform pipelines (DESIGN.md §6).
+    """Pareto-frontier DSE over transform pipelines (DESIGN.md §6, §8).
 
     Maintains a dominance-pruned archive over the objective space
     ``PARETO_METRICS`` = (latency, bram_bytes, dsp, ff_bits) and expands it
-    frontier-first: the still-unexpanded archive member with the lowest
-    latency gets every applicable single move appended; children that
-    survive capacity checks and dominance pruning join the archive and the
+    frontier-first: an unexpanded archive member is selected (lowest
+    latency for ``selector="latency"``, largest hypervolume contribution
+    over baseline-span-normalized objectives for ``selector="hv"``) and
+    every applicable single move is appended; children that survive
+    capacity checks and dominance pruning join the archive and the
     expansion queue.  The search stops when the archive has no unexpanded
     member or ``max_candidates`` compilations were spent.
+    ``macro_moves=True`` additionally offers composite fuse>tile /
+    fuse>unroll steps (one compile each).
 
     ``caps`` are absolute resource ceilings, ``rel_caps`` scale the
     BASELINE's own usage (``{"bram_bytes": 1.0}`` = iso-BRAM); violating
@@ -353,17 +740,40 @@ def pareto_explore(p: Program, *,
     reason) but never enter the archive.  Dominated candidates stay in
     ``candidates`` with a ``dominated by <desc>`` status — that record is
     what ``CompileResult.explain()`` prints.
+
+    ``jobs > 1`` measures each expansion wave on a ``ProcessPoolExecutor``
+    with a deterministic merge: the resulting archive is bit-identical to a
+    serial run (pool failures fall back to in-process measurement).
+    ``store`` is the persistent compile cache: ``"auto"`` resolves the
+    process store (None when ``REPRO_HLS_CACHE=0``), and both whole
+    frontiers and individual candidate measurements are keyed on the
+    program fingerprint, so a repeat explore is O(lookup).
     """
     from .dataflow import RESOURCE_KEYS
 
-    caps = dict(caps or {})
+    if store == "auto":
+        store = get_store()
+    caps_in = dict(caps or {})
+    caps = dict(caps_in)
     unknown = (set(caps) | set(rel_caps or {})) - set(RESOURCE_KEYS)
     if unknown:
         raise ValueError(f"unknown capacity resource(s) {sorted(unknown)}; "
                          f"valid keys: {sorted(RESOURCE_KEYS)}")
 
+    fkey = None
+    if store is not None:
+        fkey = fingerprint(p, pipeline="", mode=mode, extra=_search_signature(
+            caps_in, rel_caps, moves, unroll_factors, tile_sizes,
+            max_candidates, verify, seeds, selector, macro_moves))
+        blob = store.get(fkey)
+        if blob is not None and (blob.get("verified") or not verify):
+            try:
+                return _unpack_pareto(blob, p)
+            except (ValueError, KeyError, TypeError, IndexError):
+                pass  # stale entry: recompute (the put below overwrites it)
+
     baseline = measure_candidate(p, "baseline", [], verify=verify,
-                                 seeds=seeds, mode=mode)
+                                 seeds=seeds, mode=mode, store=store)
     for k, scale in (rel_caps or {}).items():
         ceil = scale * baseline.res[k]
         caps[k] = min(caps.get(k, ceil), ceil)
@@ -379,10 +789,19 @@ def pareto_explore(p: Program, *,
     if not archive:
         rejected.append((baseline.desc,
                          "over budget: " + "; ".join(fits(baseline))))
-    queue: list[DSECandidate] = [baseline]  # expand even an infeasible root
+    equeue = _ExpansionQueue(selector)
+    equeue.push(baseline)  # expand even an infeasible root
     seen_descs = {"baseline"}
     compiles = 1
     base_moves = _single_moves(p, moves, unroll_factors, tile_sizes)
+
+    pool = None
+    if int(jobs) > 1:
+        try:
+            import concurrent.futures as cf
+            pool = cf.ProcessPoolExecutor(max_workers=int(jobs))
+        except Exception:
+            pool = None  # graceful serial fallback
 
     def insert(c: DSECandidate) -> None:
         """Capacity check + dominance-pruned archive insertion."""
@@ -400,54 +819,80 @@ def pareto_explore(p: Program, *,
                 return
         newly_dominated = [a for a in archive
                            if dominates(vec, a.objectives())]
-        for a in newly_dominated:
-            a.status = f"dominated by {c.desc}"
-            if a in queue:
-                queue.remove(a)
-        archive[:] = [a for a in archive if a not in newly_dominated]
+        if newly_dominated:
+            for a in newly_dominated:
+                # flipping the status is what lazily invalidates the
+                # queue entry — no O(n) removal here
+                a.status = f"dominated by {c.desc}"
+            dead = {id(a) for a in newly_dominated}
+            archive[:] = [a for a in archive if id(a) not in dead]
         archive.append(c)
         c.status = "frontier"
-        queue.append(c)
+        equeue.push(c)
 
-    while queue and compiles < max_candidates:
-        # frontier-first: expand the most promising (lowest-latency)
-        # non-dominated point next
-        queue.sort(key=lambda c: (c.latency, c.res["bram_bytes"]))
-        cur = queue.pop(0)
-        base_descs = cur.desc.split(" | ") if cur.passes else []
-        # tile moves are re-derived from the expansion base: fusion renames
-        # loops, so tiling the *fused* nest (the knob the Pallas kernel
-        # layer reads as its block size) is only reachable this way
-        level_moves = base_moves
-        if "tile" in moves:
-            level_moves = base_moves + [
-                (t.name, t) for t in _tile_moves(cur.program, tile_sizes)
-                if t.name not in {d for d, _ in base_moves}]
-        for desc, mv in level_moves:
-            if desc in base_descs:
-                continue
-            full = " | ".join(base_descs + [desc])
-            if full in seen_descs:
-                continue
-            if compiles >= max_candidates:
+    try:
+        while compiles < max_candidates:
+            cur = equeue.pop(archive)
+            if cur is None:
                 break
-            seen_descs.add(full)
-            c = measure_candidate(p, full, [mv], base=cur.program,
-                                  base_passes=cur.passes, verify=verify,
-                                  seeds=seeds, mode=mode)
-            if c is None:
-                continue  # the move applied nothing
-            compiles += 1
-            candidates.append(c)
-            insert(c)
-            if verbose:
-                print(f"  dse: {full}: latency={c.latency} res={dict(c.res)} "
-                      f"[{c.status}]")
+            base_descs = cur.desc.split(" | ") if cur.passes else []
+            # tile moves are re-derived from the expansion base: fusion
+            # renames loops, so tiling the *fused* nest (the knob the Pallas
+            # kernel layer reads as its block size) is only reachable this way
+            level_moves = list(base_moves)
+            if "tile" in moves:
+                level_moves += [
+                    (t.name, t) for t in _tile_moves(cur.program, tile_sizes)
+                    if t.name not in {d for d, _ in base_moves}]
+            if macro_moves and not any(d.startswith("fuse")
+                                       for d in base_descs):
+                level_moves += _macro_moves(cur.program, moves,
+                                            unroll_factors, tile_sizes)
+            wave = []
+            for desc, mv in level_moves:
+                if desc in base_descs:
+                    continue
+                full = " | ".join(base_descs + [desc])
+                if full in seen_descs:
+                    continue
+                wave.append((full, [mv] if isinstance(mv, Pass)
+                             else list(mv)))
+            results = _measure_wave(wave, cur, p, pool, store, verify,
+                                    seeds, mode)
+            # deterministic merge: replay in submission order with the same
+            # cap / no-op / insert logic as the serial engine
+            for (full, mvs), c in zip(wave, results):
+                if full in seen_descs:
+                    continue
+                if compiles >= max_candidates:
+                    break
+                seen_descs.add(full)
+                if c is _PENDING:
+                    c = measure_candidate(p, full, mvs, base=cur.program,
+                                          base_passes=cur.passes,
+                                          verify=verify, seeds=seeds,
+                                          mode=mode, store=store)
+                if c is None:
+                    continue  # the move applied nothing
+                compiles += 1
+                candidates.append(c)
+                insert(c)
+                if verbose:
+                    print(f"  dse: {full}: latency={c.latency} "
+                          f"res={dict(c.res)} [{c.status}]")
+    finally:
+        if pool is not None:
+            pool.shutdown(wait=False)
 
     frontier = sorted(archive, key=lambda c: c.objectives())
-    return ParetoResult(baseline=baseline, frontier=frontier,
-                        candidates=candidates, rejected=rejected,
-                        caps=caps, compiles=compiles)
+    result = ParetoResult(baseline=baseline, frontier=frontier,
+                          candidates=candidates, rejected=rejected,
+                          caps=caps, compiles=compiles)
+    if store is not None and fkey is not None:
+        blob = _pack_pareto(result, verify)
+        if blob is not None:
+            store.put(fkey, blob)
+    return result
 
 
 # ---------------------------------------------------------------------------

@@ -359,8 +359,18 @@ class _Pair:
 # ---------------------------------------------------------------------------
 
 DATA_PAIR_ENUM_RUNS = 0   # full (uncached) data-pair enumerations (test probe)
+DATA_PAIR_CACHE_HITS = 0  # enumerations served from the shared cache
 _DATA_PAIR_CACHE: "OrderedDict[str, dict]" = OrderedDict()
 _DATA_PAIR_CACHE_MAX = 64
+
+
+def cache_stats() -> dict:
+    """Hit/miss counters and current size of the module-level data-pair
+    cache (bounded at ``_DATA_PAIR_CACHE_MAX`` entries with LRU eviction, so
+    long-running serving processes don't grow without limit)."""
+    return {"hits": DATA_PAIR_CACHE_HITS, "misses": DATA_PAIR_ENUM_RUNS,
+            "entries": len(_DATA_PAIR_CACHE),
+            "max_entries": _DATA_PAIR_CACHE_MAX}
 
 
 def iteration_space_key(p: Program) -> str:
@@ -453,7 +463,7 @@ class DepAnalysis:
         return cases
 
     def _enumerate_pairs(self) -> list[_Pair]:
-        global DATA_PAIR_ENUM_RUNS
+        global DATA_PAIR_ENUM_RUNS, DATA_PAIR_CACHE_HITS
         pairs = []
         by_array: dict[str, list[Access]] = {}
         for a in self.accesses:
@@ -470,6 +480,7 @@ class DepAnalysis:
             while len(_DATA_PAIR_CACHE) > _DATA_PAIR_CACHE_MAX:
                 _DATA_PAIR_CACHE.popitem(last=False)
         else:
+            DATA_PAIR_CACHE_HITS += 1
             _DATA_PAIR_CACHE.move_to_end(key)
 
         for name, accs in by_array.items():
