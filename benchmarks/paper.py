@@ -499,3 +499,151 @@ def dse_perf_table(res: dict) -> list[tuple]:
         rows.append((f"{name}.dominates_greedy", 0.0,
                      int(r["dominates_greedy"])))
     return rows
+
+
+# ---------------------------------------------------------------------------
+# Fault-tolerance benchmark (DESIGN.md §9): chaos runs vs the clean frontier
+# ---------------------------------------------------------------------------
+
+FAULTS_JSON = os.path.join(os.path.dirname(__file__), os.pardir,
+                           "BENCH_faults.json")
+
+# CI gate: recovered-fault runs must reproduce the clean frontier exactly,
+# and a divergent frontier without provenance="degraded" fails the bench.
+RECOVERY_OVERHEAD_CEIL = 25.0  # recovered-run wall-clock vs clean, max ratio
+
+
+def _frontier_hv(r, ref_objs) -> float:
+    """Latency x BRAM x DSP x FF hypervolume of ``r.frontier`` against a
+    shared reference box (1.1x the axis-max over ``ref_objs``), normalized
+    per axis so no unit dominates."""
+    from repro.core.autotune import _hv
+
+    if not r.frontier or not ref_objs:
+        return 0.0
+    lo = [min(col) for col in zip(*ref_objs)]
+    hi = [max(col) for col in zip(*ref_objs)]
+    span = [h - l if h > l else 1.0 for l, h in zip(lo, hi)]
+    pts = [tuple((x - l) / s for x, l, s in
+                 zip(c.objectives(), lo, span)) for c in r.frontier]
+    return _hv(pts, tuple(1.1 for _ in lo))
+
+
+def compute_faults(storage: str = "bram", force: bool = False) -> dict:
+    """Chaos benchmark: for every mismatched-bounds chain run hls.compile
+    (a) clean, (b) under a recovered-fault schedule (every worker's first
+    attempt crashes, retries succeed), and (c) under a degrading schedule
+    (every dependence/legality ILP times out at the root).  Gates: the
+    recovered run must be frontier-identical to clean with "exact"
+    provenance and bounded wall-clock overhead; the degraded run must
+    either match the clean frontier or carry provenance="degraded" —
+    an unlabeled divergent frontier fails the bench.  Results (hypervolume
+    ratio degraded/clean, recovery overhead) go to ``BENCH_faults.json``."""
+    cache = {}
+    if os.path.exists(FAULTS_JSON):
+        cache = json.load(open(FAULTS_JSON))
+    if storage in cache and not force:
+        return cache[storage]
+
+    from repro.core import faults, hls
+    from repro.core.programs import CHAIN_BENCHMARKS
+
+    # hermetic: chaos runs must not read or poison a developer's store
+    saved = os.environ.get("REPRO_HLS_CACHE")
+    os.environ["REPRO_HLS_CACHE"] = "0"
+    out = {}
+    try:
+        for name, mk in CHAIN_BENCHMARKS.items():
+            n = _PARETO_SIZES.get(name, 8)
+
+            def run(plan=None, jobs=1):
+                t0 = time.time()
+                search = hls.SearchConfig(max_candidates=16, jobs=jobs,
+                                          cache=False,
+                                          worker_deadline_s=60.0)
+                if plan is None:
+                    r = hls.compile(mk(n, storage=storage), search=search)
+                else:
+                    with faults.inject(**plan):
+                        r = hls.compile(mk(n, storage=storage),
+                                        search=search)
+                return r, time.time() - t0
+
+            clean_r, clean_s = run()
+            sig = _frontier_sig(clean_r)
+            ref_objs = [c.objectives() for c in clean_r.frontier]
+            hv_clean = _frontier_hv(clean_r, ref_objs)
+
+            rec_r, rec_s = run(dict(seed=0, worker_crash=1.0,
+                                    crash_attempts=(0,)), jobs=2)
+            deg_r, deg_s = run(dict(seed=0, solver_timeout=1.0))
+
+            rec = {
+                "n": n,
+                "clean_seconds": round(clean_s, 3),
+                "recovered_seconds": round(rec_s, 3),
+                "degraded_seconds": round(deg_s, 3),
+                "recovery_overhead": round(rec_s / max(clean_s, 1e-9), 2),
+                "frontier_size": len(clean_r.frontier),
+                "recovered_identical": _frontier_sig(rec_r) == sig,
+                "recovered_provenance": rec_r.provenance,
+                "recovered_retries": sum(
+                    d.get("kind") == "worker-retry"
+                    for d in rec_r.diagnostics),
+                "degraded_identical": _frontier_sig(deg_r) == sig,
+                "degraded_provenance": deg_r.provenance,
+                "degraded_frontier_size": len(deg_r.frontier),
+                "hv_clean": round(hv_clean, 4),
+                "hv_degraded": round(_frontier_hv(deg_r, ref_objs), 4),
+                "hv_ratio": round(
+                    _frontier_hv(deg_r, ref_objs) / max(hv_clean, 1e-9), 3),
+            }
+            out[name] = rec
+            if clean_r.provenance != "exact":
+                raise RuntimeError(
+                    f"faults: clean run of '{name}' claims degraded "
+                    f"provenance — the fault harness leaked into a "
+                    f"fault-free compile")
+            if not rec["recovered_identical"] \
+                    or rec["recovered_provenance"] != "exact":
+                raise RuntimeError(
+                    f"faults: '{name}' recovered-fault frontier diverged "
+                    f"from clean (identical={rec['recovered_identical']}, "
+                    f"provenance={rec['recovered_provenance']}) — retried "
+                    f"worker faults must be invisible in the result")
+            if not rec["degraded_identical"] \
+                    and rec["degraded_provenance"] != "degraded":
+                raise RuntimeError(
+                    f"faults: '{name}' degraded run diverged from the "
+                    f"clean frontier WITHOUT provenance='degraded' — "
+                    f"unlabeled divergence is unsound")
+            if rec["recovery_overhead"] > RECOVERY_OVERHEAD_CEIL:
+                raise RuntimeError(
+                    f"faults: '{name}' recovery overhead "
+                    f"{rec['recovery_overhead']}x exceeds the "
+                    f"{RECOVERY_OVERHEAD_CEIL}x ceiling "
+                    f"(clean {clean_s:.2f}s, recovered {rec_s:.2f}s)")
+    finally:
+        if saved is None:
+            os.environ.pop("REPRO_HLS_CACHE", None)
+        else:
+            os.environ["REPRO_HLS_CACHE"] = saved
+    cache[storage] = out
+    json.dump(cache, open(FAULTS_JSON, "w"), indent=1)
+    return out
+
+
+def faults_table(res: dict) -> list[tuple]:
+    """Recovery overhead + degraded-vs-clean hypervolume, per program."""
+    rows = []
+    for name, r in res.items():
+        rows.append((f"{name}.recovery_overhead", r["recovered_seconds"] * 1e6,
+                     r["recovery_overhead"]))
+        rows.append((f"{name}.recovered_identical", 0.0,
+                     int(r["recovered_identical"])))
+        rows.append((f"{name}.degraded_labeled", 0.0,
+                     int(r["degraded_identical"]
+                         or r["degraded_provenance"] == "degraded")))
+        rows.append((f"{name}.hv_ratio", r["degraded_seconds"] * 1e6,
+                     r["hv_ratio"]))
+    return rows

@@ -68,6 +68,17 @@ def main() -> None:
         _emit([(f"dse_perf.bram.{n}", us, d)
                for n, us, d in paper.dse_perf_table(res)])
 
+    if only in (None, "faults"):
+        print("# === fault tolerance — chaos runs vs the clean frontier: "
+              "recovery overhead + degraded hypervolume (DESIGN.md §9) ===")
+        # always re-run: this section IS the failure-handling gate (it
+        # raises when a recovered-fault run moves the frontier, when a
+        # divergent degraded frontier goes unlabeled, or when the recovery
+        # overhead blows past the ceiling)
+        res = paper.compute_faults(storage="bram", force=True)
+        _emit([(f"faults.bram.{n}", us, d)
+               for n, us, d in paper.faults_table(res)])
+
     if only in (None, "fusion"):
         print("# === shift-and-peel fusion — mismatched-bounds stencil chains, "
               "fused vs unfused schedule (DESIGN.md §6) ===")

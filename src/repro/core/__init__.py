@@ -13,6 +13,9 @@ import warnings as _warnings
 from .ir import (AffExpr, ArrayDecl, ArithOp, ConstOp, LoadOp, Loop, Program,
                  ProgramBuilder, StoreOp, aff, iv, normalize)
 from .ilp import solve_ilp, solve_lp, brute_force_ilp
+from . import faults
+from .errors import (CacheFault, CompileError, ScheduleInfeasible,
+                     SolverTruncated, WorkerFault)
 from .deps import DepAnalysis, DepEdge
 from .scheduler import Schedule, schedule, feasible, emit_hir
 from .transforms import (ArrayPartition, FuseProducerConsumer, LoopTile,
@@ -47,6 +50,8 @@ __all__ = [
     "MOVE_FAMILIES",
     "hls", "CompileSpec", "CompileResult", "Target", "Objective",
     "Constraint", "constraint", "minimize", "SearchConfig", "DesignPoint",
+    "faults", "CompileError", "ScheduleInfeasible", "SolverTruncated",
+    "WorkerFault", "CacheFault",
     # deprecated shims, served lazily with a DeprecationWarning:
     "compile_program", "explore",
 ]

@@ -41,9 +41,12 @@ import re
 from dataclasses import dataclass, field, replace as dc_replace
 from typing import Optional, Sequence, Union
 
+from . import faults
 from .autotune import (DSECandidate, DSEResult, MOVE_FAMILIES,
-                       PARETO_METRICS, ParetoResult, dominates,
+                       PARETO_METRICS, ParetoResult, _degrading, dominates,
                        measure_candidate, pareto_explore, validate_candidate)
+from .errors import (CacheFault, CompileError, ScheduleInfeasible,
+                     SolverTruncated, WorkerFault)
 from .ir import Program
 from .pipeline_parse import parse_pipeline, print_pipeline
 from .transforms import Pass
@@ -184,7 +187,13 @@ class SearchConfig:
     fuse>tile / fuse>unroll single-step moves; ``jobs`` fans candidate
     compiles within one expansion wave across a process pool (results are
     bit-identical to serial); ``cache`` enables the persistent compile
-    cache (also gated globally by ``REPRO_HLS_CACHE``)."""
+    cache (also gated globally by ``REPRO_HLS_CACHE``).
+
+    ``worker_deadline_s`` bounds each parallel worker's wall-clock per
+    candidate — a hung worker past the deadline is retried then
+    quarantined instead of stalling the wave (DESIGN.md §9).  Like
+    ``jobs`` it does not change results, only how faults are survived,
+    so it is excluded from the frontier cache key."""
 
     moves: tuple[str, ...] = MOVE_FAMILIES
     unroll_factors: tuple[int, ...] = (2, 4)
@@ -197,6 +206,7 @@ class SearchConfig:
     macro_moves: bool = False
     jobs: int = 1
     cache: bool = True
+    worker_deadline_s: Optional[float] = 60.0
 
 
 @dataclass(frozen=True)
@@ -254,6 +264,19 @@ class CompileResult:
     #: invariant between cold and warm-cache runs (a cache hit still counts;
     #: it answers "how much search reached this frontier", not "how much CPU")
     compiles: int = 0
+    #: structured failure-handling record (DESIGN.md §9): solver gaps,
+    #: worker retries/quarantines, pool rebuilds, cache repairs
+    diagnostics: list[dict] = field(default_factory=list)
+    #: "degraded" when any diagnostic may have moved the result off the
+    #: fault-free one; transparently recovered faults stay "exact"
+    provenance: str = "exact"
+
+    @property
+    def degraded(self) -> bool:
+        """True when a fault forced a conservative (sound but possibly
+        suboptimal) answer somewhere — the frontier may differ from the
+        fault-free run; ``diagnostics`` says where and why."""
+        return self.provenance != "exact"
 
     @property
     def schedule(self):
@@ -307,14 +330,31 @@ class CompileResult:
                                        order.get(id(c), 0), c.desc)):
             mark = " <- best" if c is self.best else ""
             src = " {cache hit}" if c.cached else ""
+            deg = " {degraded}" if getattr(c, "provenance", "exact") != "exact" \
+                else ""
             lines.append(
                 f"  {c.desc}: latency={c.latency} " +
                 " ".join(f"{k}={c.res[k]:g}"
                          for k in ("bram_bytes", "dsp", "ff_bits")) +
-                f" [{c.status or 'ok'}]{src}{mark}")
+                f" [{c.status or 'ok'}]{src}{deg}{mark}")
         for desc, reason in self.rejected:
             if not any(c.desc == desc for c in self.candidates):
                 lines.append(f"  {desc}: [{reason}]")
+        if self.diagnostics:
+            counts: dict[str, int] = {}
+            for d in self.diagnostics:
+                k = str(d.get("kind", "unknown"))
+                counts[k] = counts.get(k, 0) + 1
+            lines.append(
+                f"diagnostics ({'degraded' if self.degraded else 'exact'}): "
+                + ", ".join(f"{k} x{n}" for k, n in sorted(counts.items())))
+            for d in self.diagnostics:
+                if d.get("kind") == "solver-degraded":
+                    lines.append(
+                        f"  solver gap on ({d.get('src')}, {d.get('snk')}) "
+                        f"carry={d.get('carry')}: bound={d.get('slack_bound')}"
+                        + (f" gap={d['gap']:g}" if d.get("gap") is not None
+                           else ""))
         return "\n".join(lines)
 
 
@@ -398,6 +438,8 @@ def compile(program: Program, spec: Optional[CompileSpec] = None, *,
                 raise TypeError(f"pipeline element is not a Pass: {ps!r}")
         from .cache import get_store
         store = get_store() if sc.cache else None
+        repairs0 = store.repairs if store is not None else 0
+        ev0 = faults.event_count()
         baseline = measure_candidate(program, "baseline", [],
                                      verify=sc.verify, seeds=sc.seeds,
                                      mode=spec.target.mode, store=store)
@@ -429,10 +471,19 @@ def compile(program: Program, spec: Optional[CompileSpec] = None, *,
             frontier = [point]
         if sc.validate and not viol:
             validate_candidate(point, sc.seeds)
+        diagnostics = [dict(d) for d in faults.events_since(ev0)
+                       if d.get("kind") != "cache-repair"]
+        repaired = (store.repairs - repairs0) if store is not None else 0
+        if repaired:
+            diagnostics.append({"kind": "cache-repair", "count": repaired})
+        degraded = any(getattr(c, "provenance", "exact") != "exact"
+                       for c in candidates) or _degrading(diagnostics)
         return CompileResult(program=program, spec=spec, baseline=baseline,
                              best=point, frontier=frontier,
                              candidates=candidates, rejected=rejected,
-                             caps=caps, compiles=len(candidates))
+                             caps=caps, compiles=len(candidates),
+                             diagnostics=diagnostics,
+                             provenance="degraded" if degraded else "exact")
 
     r: ParetoResult = pareto_explore(
         program, caps=caps, rel_caps=rel, moves=sc.moves,
@@ -440,6 +491,7 @@ def compile(program: Program, spec: Optional[CompileSpec] = None, *,
         max_candidates=sc.max_candidates, verify=sc.verify, seeds=sc.seeds,
         mode=spec.target.mode, selector=sc.selector,
         macro_moves=sc.macro_moves, jobs=sc.jobs,
+        worker_deadline_s=sc.worker_deadline_s,
         store="auto" if sc.cache else None, verbose=verbose)
     best = _select_best(r.frontier, r.baseline, spec)
     if sc.validate:
@@ -447,7 +499,8 @@ def compile(program: Program, spec: Optional[CompileSpec] = None, *,
     return CompileResult(program=program, spec=spec, baseline=r.baseline,
                          best=best, frontier=r.frontier,
                          candidates=r.candidates, rejected=r.rejected,
-                         caps=r.caps, compiles=r.compiles)
+                         caps=r.caps, compiles=r.compiles,
+                         diagnostics=r.diagnostics, provenance=r.provenance)
 
 
 # ---------------------------------------------------------------------------

@@ -25,12 +25,15 @@ on as deprecated shims there.
 from __future__ import annotations
 
 import heapq
+import time
 from dataclasses import dataclass, field
 from typing import Optional, Sequence, Union
 
+from . import faults
 from .cache import (CacheStore, fingerprint, get_store, pack_schedule,
                     unpack_schedule)
 from .deps import DepAnalysis
+from .errors import CompileError, ScheduleInfeasible
 from .ir import Loop, Program
 from .scheduler import Schedule, check_loop_occupancy, feasible, schedule
 from .transforms import (ArrayPartition, FuseProducerConsumer, LoopTile,
@@ -104,8 +107,15 @@ def autotune(p: Program, dep: Optional[DepAnalysis] = None,
         if verbose:
             print(f"  autotune: loop {loop.ivname} II={best}")
 
-    assert check_loop_occupancy(p, iis)
-    assert feasible(p, iis, dep), "autotuned IIs must be feasible"
+    if not check_loop_occupancy(p, iis) or not feasible(p, iis, dep):
+        # unreachable on an exact analysis (the binary search only accepts
+        # feasible probes); conservative degraded dependence bounds can in
+        # principle leave no feasible II — fail honestly, never return a
+        # schedule that was not proven feasible
+        raise ScheduleInfeasible(
+            "autotuned IIs are not feasible"
+            + (" (degraded dependence bounds)" if getattr(
+                dep, "degradations", None) else ""))
     return iis
 
 
@@ -114,7 +124,8 @@ def compile_program(p: Program, verbose: bool = False) -> Schedule:
     dep = DepAnalysis(p)
     iis = autotune(p, dep, verbose=verbose)
     s = schedule(p, iis, dep)
-    assert s.feasible
+    if not s.feasible:
+        raise ScheduleInfeasible("scheduling failed for autotuned IIs")
     return s
 
 
@@ -143,6 +154,10 @@ class DSECandidate:
     status: str = ""              # "baseline" | "frontier" | "dominated by
     #                               <desc>" | "over budget: <violations>"
     cached: bool = False          # rehydrated from the persistent cache
+    # "degraded" when a truncated solver forced conservative bounds anywhere
+    # in this candidate's transform legality checks or schedule (DESIGN.md §9)
+    provenance: str = "exact"
+    diags: tuple = field(default=(), repr=False, compare=False)
     _obj: Optional[tuple] = field(default=None, repr=False, compare=False)
 
     def metric(self, key: str) -> float:
@@ -305,10 +320,16 @@ def _probe_candidate_cache(store: Optional[CacheStore], key: Optional[str],
         return False, None
 
 
+def _degrading(events: Sequence[dict]) -> bool:
+    return any(e.get("kind") in faults.DEGRADING_KINDS for e in events)
+
+
 def _store_candidate(store: Optional[CacheStore], key: Optional[str],
                      c: Optional[DSECandidate], verify: bool) -> None:
     if store is None or key is None:
         return
+    if c is not None and c.provenance != "exact":
+        return  # degraded measurements must never poison the cache
     if c is None:
         store.put(key, {"noop": True})
         return
@@ -354,18 +375,25 @@ def measure_candidate(p: Program, desc: str, passes: Sequence[Pass], *,
                                         base_passes, verify, incremental)
         if hit:
             return c
+    ev0 = faults.event_count()  # degradations recorded while measuring
     pm = PassManager(passes, verify=verify, seeds=seeds)
     q = pm.run(start)
     if passes and (q is start or
                    (incremental and not pm.reports[-1].changed)):
-        _store_candidate(store, key, None, verify)
+        if not _degrading(faults.events_since(ev0)):
+            # a *degraded* no-op verdict (e.g. a conservatively refused
+            # fusion) must not be persisted as the pipeline's truth
+            _store_candidate(store, key, None, verify)
         return None
     s = compile_program(q)
     res = resources(q, s, mode)
+    diags = tuple(faults.events_since(ev0))
+    prov = ("degraded"
+            if s.provenance == "degraded" or _degrading(diags) else "exact")
     c = DSECandidate(
         desc=desc or "baseline", passes=tuple(base_passes) + tuple(passes),
         program=q, schedule=s, latency=s.completion_time(), res=res,
-        within_budget=True)
+        within_budget=True, provenance=prov, diags=diags)
     _store_candidate(store, key, c, verify)
     return c
 
@@ -562,33 +590,187 @@ def _bump_uid_counter(p: Program) -> None:
     ir._uid = itertools.count(max(top + 1, nxt + 1))
 
 
-def _measure_worker(payload: tuple) -> Optional[DSECandidate]:
+def _measure_worker(payload: tuple):
     """Pool entry point for one cold candidate measurement.  Workers never
     touch the persistent store — the parent owns cache probing/writing, so
-    the on-disk state is single-writer per explore call."""
-    program, desc, passes, base_passes, verify, seeds, mode = payload
+    the on-disk state is single-writer per explore call.  Returns
+    ``(candidate_or_None, worker_events)`` so degradations behind a None
+    (no-op) verdict still reach the parent."""
+    program, desc, passes, base_passes, verify, seeds, mode, attempt = payload
+    faults.worker_fault_point(desc, attempt)
     _bump_uid_counter(program)
-    return measure_candidate(program, desc, passes, base_passes=base_passes,
-                             verify=verify, seeds=seeds, mode=mode)
+    ev0 = faults.event_count()
+    c = measure_candidate(program, desc, passes, base_passes=base_passes,
+                          verify=verify, seeds=seeds, mode=mode)
+    return c, tuple(faults.events_since(ev0))
 
 
-_PENDING = object()   # serial-mode placeholder: measure lazily at replay
+_PENDING = object()     # serial-mode placeholder: measure lazily at replay
+_IN_PROCESS = object()  # supervisor verdict: measure in the parent process
+
+WORKER_RETRIES = 2        # faults per candidate before quarantine
+WORKER_BACKOFF_S = 0.05   # base of the capped exponential retry backoff
+WORKER_BACKOFF_CAP_S = 1.0
+POOL_REBUILD_CAP = 6      # pool rebuilds per explore before serial fallback
 
 
-def _measure_wave(wave: list, cur: "DSECandidate", p: Program, pool,
+class _WorkerFault:
+    """Replay sentinel: this candidate was quarantined after repeated worker
+    faults — recorded in ``rejected`` with a ``worker-fault`` reason, never
+    counted as a compile."""
+
+    __slots__ = ("reason",)
+
+    def __init__(self, reason: str):
+        self.reason = reason
+
+
+class _CompileFailed:
+    """Replay sentinel: the candidate failed deterministically inside the
+    worker (TransformError / CompileError) — the same verdict the serial
+    engine reaches, so serial and parallel runs stay bit-identical."""
+
+    __slots__ = ("error",)
+
+    def __init__(self, error: str):
+        self.error = error
+
+
+class _PoolSupervisor:
+    """Owns the DSE ProcessPoolExecutor (DESIGN.md §9): per-candidate
+    deadlines on ``Future.result``, capped exponential-backoff retries for
+    transient faults, hard pool rebuilds on hang/breakage, and quarantine
+    after ``WORKER_RETRIES`` strikes.  Created immediately before the
+    explore loop's ``try`` and closed in its ``finally`` with
+    ``shutdown(cancel_futures=True)``, so a raising insert/selector can't
+    leak worker processes."""
+
+    def __init__(self, jobs: int, deadline_s: Optional[float]):
+        self.jobs = int(jobs)
+        self.deadline_s = deadline_s
+        self.rebuilds = 0
+        self.events: list[dict] = []
+        self.pool = self._make()
+
+    def _make(self):
+        try:
+            import concurrent.futures as cf
+            return cf.ProcessPoolExecutor(max_workers=self.jobs)
+        except Exception:
+            return None
+
+    def note(self, kind: str, **info) -> None:
+        self.events.append({"kind": kind, **info})
+
+    def submit(self, payload):
+        if self.pool is None:
+            return None
+        try:
+            return self.pool.submit(_measure_worker, payload)
+        except Exception:
+            return None
+
+    def rebuild(self) -> None:
+        """Tear the (hung or broken) pool down hard and start fresh.  A
+        hung worker ignores ``shutdown``, so its process is terminated."""
+        self.rebuilds += 1
+        old, self.pool = self.pool, None
+        if old is not None:
+            procs = []
+            try:
+                procs = list(getattr(old, "_processes", {}).values())
+            except Exception:
+                pass
+            try:
+                old.shutdown(wait=False, cancel_futures=True)
+            except Exception:
+                pass
+            for proc in procs:
+                try:
+                    proc.terminate()
+                except Exception:
+                    pass
+        if self.rebuilds <= POOL_REBUILD_CAP:
+            self.pool = self._make()
+        else:
+            self.note("pool-disabled", rebuilds=self.rebuilds)
+
+    def close(self) -> None:
+        if self.pool is not None:
+            try:
+                self.pool.shutdown(wait=False, cancel_futures=True)
+            except Exception:
+                pass
+            self.pool = None
+
+    def collect(self, fut, make_payload, desc: str) -> tuple:
+        """Supervise one candidate's future to a verdict.
+
+        Returns ``("ok", (candidate, worker_events))``,
+        ``("quarantine", reason)``, ``("compile-error", message)``, or
+        ``("fallback", None)`` (pool unusable: measure in-process)."""
+        import concurrent.futures as cf
+        from concurrent.futures.process import BrokenProcessPool
+
+        strikes = 0
+        attempt = 0
+        resubmits = 0
+        while True:
+            if fut is None:
+                return ("fallback", None)
+            try:
+                return ("ok", fut.result(timeout=self.deadline_s))
+            except (TransformError, CompileError) as e:
+                return ("compile-error", str(e))
+            except cf.CancelledError:
+                # collateral of a pool rebuild triggered by a sibling —
+                # resubmit the same attempt, no strike
+                resubmits += 1
+                if resubmits > 2 * POOL_REBUILD_CAP:
+                    return ("fallback", None)
+                fut = self.submit(make_payload(attempt))
+                continue
+            except cf.TimeoutError:
+                strikes += 1
+                self.note("worker-hang", candidate=desc, attempt=attempt,
+                          deadline_s=self.deadline_s)
+                self.rebuild()
+            except BrokenProcessPool:
+                strikes += 1
+                self.note("pool-broken", candidate=desc, attempt=attempt)
+                self.rebuild()
+            except BaseException as e:
+                strikes += 1
+                self.note("worker-crash", candidate=desc, attempt=attempt,
+                          error=repr(e))
+            if strikes >= WORKER_RETRIES:
+                return ("quarantine",
+                        f"worker-fault: quarantined after {strikes} faults")
+            attempt += 1
+            self.note("worker-retry", candidate=desc, attempt=attempt)
+            time.sleep(min(WORKER_BACKOFF_S * (2 ** (attempt - 1)),
+                           WORKER_BACKOFF_CAP_S))
+            fut = self.submit(make_payload(attempt))
+
+
+def _measure_wave(wave: list, cur: "DSECandidate", p: Program,
+                  sup: Optional[_PoolSupervisor],
                   store: Optional[CacheStore], verify: bool,
                   seeds: Sequence[int], mode: str) -> list:
     """Measure one expansion wave (all moves off one base), aligned with
     ``wave``.
 
-    Serial mode (``pool`` is None) returns ``_PENDING`` placeholders so the
+    Serial mode (``sup`` is None) returns ``_PENDING`` placeholders so the
     caller measures each move only after its under-cap check — exactly the
     sequential engine's behavior.  Parallel mode probes the cache first,
-    fans the misses out across the pool, and persists the results; compiles
-    that land beyond the candidate cap are discarded at replay, so the
-    merged archive is bit-identical to a serial run.  Any pool failure
-    falls back to measuring that entry in-process."""
-    if pool is None:
+    fans the misses out across the supervised pool, and collects each
+    result under a per-candidate deadline with retry / pool-rebuild /
+    quarantine handling; compiles that land beyond the candidate cap are
+    discarded at replay, so the merged archive is bit-identical to a
+    serial run — faults or not.  A slot may also hold a ``_WorkerFault``
+    (quarantined) or ``_CompileFailed`` (deterministic failure) sentinel
+    for the replay loop."""
+    if sup is None or sup.pool is None:
         return [_PENDING] * len(wave)
     results: list = [None] * len(wave)
     futs: dict[int, tuple] = {}
@@ -603,28 +785,30 @@ def _measure_wave(wave: list, cur: "DSECandidate", p: Program, pool,
             if hit:
                 results[i] = c
                 continue
-        payload = (cur.program, full, list(mvs), tuple(cur.passes),
-                   verify, tuple(seeds), mode)
-        try:
-            futs[i] = (pool.submit(_measure_worker, payload), key)
-        except Exception:
-            futs[i] = (None, key)
-    for i, (fut, key) in futs.items():
-        c, ok = None, False
-        if fut is not None:
-            try:
-                c = fut.result()
-                ok = True
-            except Exception:
-                ok = False
-        if ok:
-            _store_candidate(store, key, c, verify)
-        else:
-            full, mvs = wave[i]
-            c = measure_candidate(p, full, mvs, base=cur.program,
-                                  base_passes=cur.passes, verify=verify,
-                                  seeds=seeds, mode=mode, store=store)
-        results[i] = c
+
+        def make_payload(attempt: int, full=full, mvs=mvs) -> tuple:
+            return (cur.program, full, list(mvs), tuple(cur.passes),
+                    verify, tuple(seeds), mode, attempt)
+
+        futs[i] = (sup.submit(make_payload(0)), key, make_payload)
+    for i, (fut, key, make_payload) in futs.items():
+        full, mvs = wave[i]
+        kind, val = sup.collect(fut, make_payload, full)
+        if kind == "ok":
+            c, wevents = val
+            if c is None and wevents:
+                # degradations behind a no-op verdict would otherwise be
+                # lost with the worker process
+                sup.events.extend({**e, "candidate": full} for e in wevents)
+            if not _degrading(wevents):
+                _store_candidate(store, key, c, verify)
+            results[i] = c
+        elif kind == "quarantine":
+            results[i] = _WorkerFault(val)
+        elif kind == "compile-error":
+            results[i] = _CompileFailed(val)
+        else:  # pool unusable: fall back to in-process measurement
+            results[i] = _PENDING
     return results
 
 
@@ -638,6 +822,12 @@ class ParetoResult:
     rejected: list[tuple[str, str]]         # (desc, reason) — capacity etc.
     caps: dict[str, float]                  # resolved absolute ceilings
     compiles: int
+    # structured failure-handling record (DESIGN.md §9): solver gaps,
+    # worker retries/quarantines, pool rebuilds, cache repairs
+    diagnostics: list[dict] = field(default_factory=list)
+    # "degraded" when any diagnostic may have moved the frontier off the
+    # fault-free result; recovered faults (retries, repairs) stay "exact"
+    provenance: str = "exact"
 
 
 def _search_signature(caps, rel_caps, moves, unroll_factors, tile_sizes,
@@ -658,7 +848,10 @@ def _search_signature(caps, rel_caps, moves, unroll_factors, tile_sizes,
 
 def _pack_pareto(r: ParetoResult, verify: bool) -> Optional[dict]:
     """The whole ParetoResult as a JSON blob (None when any candidate's
-    pipeline falls outside the textual grammar)."""
+    pipeline falls outside the textual grammar, or when the result is
+    degraded — a faulted frontier must never be replayed as the truth)."""
+    if r.provenance != "exact":
+        return None
     cand_blobs = []
     for c in r.candidates:
         text = _pipeline_text(c.passes)
@@ -718,6 +911,7 @@ def pareto_explore(p: Program, *,
                    selector: str = "latency",
                    macro_moves: bool = False,
                    jobs: int = 1,
+                   worker_deadline_s: Optional[float] = 60.0,
                    store: Union[CacheStore, str, None] = "auto",
                    verbose: bool = False) -> ParetoResult:
     """Pareto-frontier DSE over transform pipelines (DESIGN.md §6, §8).
@@ -741,9 +935,15 @@ def pareto_explore(p: Program, *,
     ``candidates`` with a ``dominated by <desc>`` status — that record is
     what ``CompileResult.explain()`` prints.
 
-    ``jobs > 1`` measures each expansion wave on a ``ProcessPoolExecutor``
-    with a deterministic merge: the resulting archive is bit-identical to a
-    serial run (pool failures fall back to in-process measurement).
+    ``jobs > 1`` measures each expansion wave on a *supervised*
+    ``ProcessPoolExecutor`` with a deterministic merge: the resulting
+    archive is bit-identical to a serial run.  The supervisor bounds each
+    candidate by ``worker_deadline_s``, retries transient worker faults
+    with capped exponential backoff, rebuilds the pool when it hangs or
+    breaks, and quarantines candidates that keep faulting (recorded in
+    ``rejected`` with a ``worker-fault`` reason); an unusable pool falls
+    back to in-process measurement.  Every recovery action lands in
+    ``ParetoResult.diagnostics``.
     ``store`` is the persistent compile cache: ``"auto"`` resolves the
     process store (None when ``REPRO_HLS_CACHE=0``), and both whole
     frontiers and individual candidate measurements are keyed on the
@@ -772,6 +972,9 @@ def pareto_explore(p: Program, *,
             except (ValueError, KeyError, TypeError, IndexError):
                 pass  # stale entry: recompute (the put below overwrites it)
 
+    repairs0 = store.repairs if store is not None else 0
+    extra_events: list[dict] = []  # parent-side events not tied to a candidate
+
     baseline = measure_candidate(p, "baseline", [], verify=verify,
                                  seeds=seeds, mode=mode, store=store)
     for k, scale in (rel_caps or {}).items():
@@ -795,13 +998,11 @@ def pareto_explore(p: Program, *,
     compiles = 1
     base_moves = _single_moves(p, moves, unroll_factors, tile_sizes)
 
-    pool = None
+    sup = None
     if int(jobs) > 1:
-        try:
-            import concurrent.futures as cf
-            pool = cf.ProcessPoolExecutor(max_workers=int(jobs))
-        except Exception:
-            pool = None  # graceful serial fallback
+        sup = _PoolSupervisor(int(jobs), worker_deadline_s)
+        if sup.pool is None:
+            sup = None  # graceful serial fallback
 
     def insert(c: DSECandidate) -> None:
         """Capacity check + dominance-pruned archive insertion."""
@@ -846,8 +1047,13 @@ def pareto_explore(p: Program, *,
                     if t.name not in {d for d, _ in base_moves}]
             if macro_moves and not any(d.startswith("fuse")
                                        for d in base_descs):
+                ev0 = faults.event_count()
                 level_moves += _macro_moves(cur.program, moves,
                                             unroll_factors, tile_sizes)
+                # the structural fuse probe can itself hit a degraded
+                # legality check — capture those events here, they belong
+                # to no measured candidate
+                extra_events.extend(faults.events_since(ev0))
             wave = []
             for desc, mv in level_moves:
                 if desc in base_descs:
@@ -857,7 +1063,7 @@ def pareto_explore(p: Program, *,
                     continue
                 wave.append((full, [mv] if isinstance(mv, Pass)
                              else list(mv)))
-            results = _measure_wave(wave, cur, p, pool, store, verify,
+            results = _measure_wave(wave, cur, p, sup, store, verify,
                                     seeds, mode)
             # deterministic merge: replay in submission order with the same
             # cap / no-op / insert logic as the serial engine
@@ -867,11 +1073,36 @@ def pareto_explore(p: Program, *,
                 if compiles >= max_candidates:
                     break
                 seen_descs.add(full)
+                if isinstance(c, _WorkerFault):
+                    rejected.append((full, c.reason))
+                    extra_events.append({"kind": "worker-quarantine",
+                                         "candidate": full,
+                                         "reason": c.reason})
+                    continue
+                if isinstance(c, _CompileFailed):
+                    rejected.append((full, f"compile-error: {c.error}"))
+                    extra_events.append({"kind": "compile-error",
+                                         "candidate": full,
+                                         "error": c.error})
+                    continue
                 if c is _PENDING:
-                    c = measure_candidate(p, full, mvs, base=cur.program,
-                                          base_passes=cur.passes,
-                                          verify=verify, seeds=seeds,
-                                          mode=mode, store=store)
+                    ev0 = faults.event_count()
+                    try:
+                        c = measure_candidate(p, full, mvs, base=cur.program,
+                                              base_passes=cur.passes,
+                                              verify=verify, seeds=seeds,
+                                              mode=mode, store=store)
+                    except (TransformError, CompileError) as e:
+                        rejected.append((full, f"compile-error: {e}"))
+                        extra_events.append({"kind": "compile-error",
+                                             "candidate": full,
+                                             "error": str(e)})
+                        continue
+                    if c is None:
+                        # keep degradations behind a no-op verdict
+                        extra_events.extend(
+                            {**e, "candidate": full}
+                            for e in faults.events_since(ev0))
                 if c is None:
                     continue  # the move applied nothing
                 compiles += 1
@@ -881,15 +1112,28 @@ def pareto_explore(p: Program, *,
                     print(f"  dse: {full}: latency={c.latency} "
                           f"res={dict(c.res)} [{c.status}]")
     finally:
-        if pool is not None:
-            pool.shutdown(wait=False)
+        if sup is not None:
+            sup.close()
 
     frontier = sorted(archive, key=lambda c: c.objectives())
+    diagnostics: list[dict] = []
+    for c in candidates:
+        diagnostics.extend({**d, "candidate": c.desc} for d in c.diags)
+    diagnostics.extend(extra_events)
+    if sup is not None:
+        diagnostics.extend(sup.events)
+    if store is not None and store.repairs > repairs0:
+        diagnostics.append({"kind": "cache-repair",
+                            "count": store.repairs - repairs0})
+    degraded = (any(c.provenance != "exact" for c in candidates)
+                or _degrading(diagnostics))
     result = ParetoResult(baseline=baseline, frontier=frontier,
                           candidates=candidates, rejected=rejected,
-                          caps=caps, compiles=compiles)
+                          caps=caps, compiles=compiles,
+                          diagnostics=diagnostics,
+                          provenance="degraded" if degraded else "exact")
     if store is not None and fkey is not None:
-        blob = _pack_pareto(result, verify)
+        blob = _pack_pareto(result, verify)  # None for degraded results
         if blob is not None:
             store.put(fkey, blob)
     return result

@@ -43,12 +43,14 @@ import os
 import tempfile
 from typing import Optional
 
+from . import faults
 from .ir import ArithOp, ConstOp, LoadOp, Loop, Program, StoreOp
 
 # Version salt: bump whenever the scheduler, a transform, or the resource
 # model changes behavior — persisted entries with a different salt are
 # invalid by definition and are discarded on read.
-SCHEDULER_SALT = "repro-hls-6"
+# 7: checksummed wrapper format + Schedule/frontier provenance fields.
+SCHEDULER_SALT = "repro-hls-7"
 
 DEFAULT_MAX_ENTRIES = 4096
 DEFAULT_MAX_BYTES = 256 << 20  # 256 MiB
@@ -139,6 +141,7 @@ def pack_schedule(s) -> dict:
         "edges": [[idx[e.src], idx[e.snk], e.lower, e.kind, e.array]
                   for e in s.edges],
         "feasible": bool(s.feasible),
+        "provenance": getattr(s, "provenance", "exact"),
     }
 
 
@@ -168,7 +171,8 @@ def unpack_schedule(q: Program, blob: dict):
         edges.append(DepEdge(src=order[src].uid, snk=order[snk].uid,
                              lower=int(lower), kind=kind, array=array))
     return Schedule(program=q, iis=iis, theta=theta, edges=edges,
-                    feasible=bool(blob.get("feasible", True)))
+                    feasible=bool(blob.get("feasible", True)),
+                    provenance=str(blob.get("provenance", "exact")))
 
 
 # ---------------------------------------------------------------------------
@@ -193,15 +197,21 @@ class CacheStore:
         self.misses = 0
         self.puts = 0
         self.evictions = 0
+        self.repairs = 0  # corrupt entries detected, discarded, recompiled
         self._mem: dict[str, object] = {}  # in-process read-through layer
 
     # ------------------------------------------------------------------
     def _path(self, key: str) -> str:
         return os.path.join(self.root, key[:2], key + ".json")
 
+    @staticmethod
+    def _checksum(data_str: str) -> str:
+        return hashlib.sha256(data_str.encode()).hexdigest()
+
     def get(self, key: str):
-        """The entry for ``key`` or None.  Corrupt / stale-salt blobs are
-        deleted and reported as a miss (the caller recompiles and re-puts)."""
+        """The entry for ``key`` or None.  Corrupt (torn write, bit flip,
+        checksum mismatch) or stale-salt blobs are deleted, counted in
+        ``repairs``, and reported as a miss (the caller recompiles/re-puts)."""
         obj = self._mem.get(key)
         if obj is not None:
             self.hits += 1
@@ -209,10 +219,21 @@ class CacheStore:
         path = self._path(key)
         try:
             with open(path, "r") as f:
-                wrapper = json.load(f)
+                raw = f.read()
+            if faults.should_fire("cache_corrupt", key="get:" + key):
+                # simulate a torn blob surfacing at read time
+                raw = raw[:max(1, (2 * len(raw)) // 3)]
+            wrapper = json.loads(raw)
             if not isinstance(wrapper, dict) or wrapper.get("salt") != self.salt:
                 raise ValueError("cache salt mismatch")
-            obj = wrapper["data"]
+            data = wrapper["data"]
+            # round-tripping through json.dumps reproduces the exact string
+            # the checksum was taken over at put time (canonical separators,
+            # shortest-round-trip float repr, insertion-ordered dicts)
+            if wrapper.get("sum") != self._checksum(
+                    json.dumps(data, separators=(",", ":"))):
+                raise ValueError("cache checksum mismatch")
+            obj = data
         except FileNotFoundError:
             self.misses += 1
             return None
@@ -221,6 +242,8 @@ class CacheStore:
                 os.unlink(path)
             except OSError:
                 pass
+            self.repairs += 1
+            faults.note("cache-repair", key=key)
             self.misses += 1
             return None
         try:
@@ -233,8 +256,22 @@ class CacheStore:
 
     def put(self, key: str, obj) -> None:
         """Atomically persist ``obj`` under ``key`` (temp file + rename:
-        concurrent writers race benignly — last rename wins, both valid)."""
-        self._mem[key] = obj
+        concurrent writers race benignly — last rename wins, both valid).
+        The temp file is fsynced before the rename and the payload carries a
+        checksum, so a crash mid-write leaves either the old entry or a blob
+        ``get`` detects as corrupt — never a silently wrong schedule."""
+        data_str = json.dumps(obj, separators=(",", ":"))
+        payload = ('{"salt":%s,"sum":%s,"data":%s}'
+                   % (json.dumps(self.salt),
+                      json.dumps(self._checksum(data_str)), data_str))
+        torn = faults.should_fire("cache_corrupt", key="put:" + key)
+        if torn:
+            # emulate a writer that died mid-write (no fsync/rename
+            # discipline): a truncated blob lands under the final name and
+            # the in-memory layer never saw the object
+            payload = payload[:max(1, (2 * len(payload)) // 3)]
+        else:
+            self._mem[key] = obj
         path = self._path(key)
         try:
             os.makedirs(os.path.dirname(path), exist_ok=True)
@@ -242,8 +279,9 @@ class CacheStore:
                                        prefix=".tmp-", suffix=".json")
             try:
                 with os.fdopen(fd, "w") as f:
-                    json.dump({"salt": self.salt, "data": obj}, f,
-                              separators=(",", ":"))
+                    f.write(payload)
+                    f.flush()
+                    os.fsync(f.fileno())
                 os.replace(tmp, path)
             except BaseException:
                 try:
@@ -313,7 +351,8 @@ class CacheStore:
     def stats(self) -> dict:
         entries = self._entries()
         return {"hits": self.hits, "misses": self.misses, "puts": self.puts,
-                "evictions": self.evictions, "entries": len(entries),
+                "evictions": self.evictions, "repairs": self.repairs,
+                "entries": len(entries),
                 "bytes": sum(sz for _, sz, _ in entries)}
 
 

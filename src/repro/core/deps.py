@@ -38,8 +38,11 @@ from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Optional
 
+import math
+
 import numpy as np
 
+from . import faults
 from .ilp import solve_ilp
 from .ir import ArrayDecl, LoadOp, Loop, Program, StoreOp, position_keys
 
@@ -411,6 +414,12 @@ class DepAnalysis:
         self.crosscheck = crosscheck
         self.fallback_cases = 0   # cases the closed form could not take
         self.fast_cases = 0
+        # truncated-solver degradations: each entry records one dependence
+        # case whose slack was replaced by a conservative lower bound.  A
+        # non-empty list taints every schedule built from this analysis
+        # (Schedule.provenance == "degraded").
+        self.degradations: list[dict] = []
+        self._degraded_keys: set = set()
         self._edge_cache: dict = {}
         self._static_edges: Optional[list[DepEdge]] = None
         self._nodes: Optional[list] = None
@@ -499,9 +508,14 @@ class DepAnalysis:
                     ckey = (X.uid, Y.uid, kind)
                     entry = shared.get(ckey)
                     if entry is None:
+                        deg0 = len(self.degradations)
                         rows = self._address_rows(X, Y, None)
                         entry = (rows, self._feasible_cases(X, Y, rows))
-                        shared[ckey] = entry
+                        if len(self.degradations) == deg0:
+                            # only clean computations enter the shared
+                            # cross-candidate cache; a degraded case list
+                            # must not poison fault-free analyses
+                            shared[ckey] = entry
                     rows, cases = entry
                     if cases:
                         self._append_pair(pairs, X, Y, kind, delay, name,
@@ -542,7 +556,12 @@ class DepAnalysis:
             if val is not _FALLBACK:
                 self.fast_cases += 1
                 if self.crosscheck:
+                    deg0 = len(self.degradations)
                     ref = self._ilp_case_slack(X, Y, carry_level, rows, iis)
+                    if len(self.degradations) > deg0:
+                        # the ILP reference itself was truncated: its value
+                        # is a bound, not a ground truth to compare against
+                        return val
                     if val != ref:
                         raise AssertionError(
                             f"fast-path slack mismatch: {val} != ILP {ref} "
@@ -604,14 +623,35 @@ class DepAnalysis:
                         bounds=bounds)
         if res.ok:
             return int(round(res.fun))
-        if res.status != "infeasible":
-            # a truncated search must not be read as "no dependence": case
-            # feasibility is decided once at construction, so dropping the
-            # case here would delete a real dependence edge for good
+        if res.status == "infeasible":
+            return None
+        if not res.truncated:
             raise RuntimeError(
                 f"dependence-case ILP unresolved ({res.status}) for "
                 f"{X.op!r} -> {Y.op!r}")
-        return None
+        # Truncated search (deadline / node cap / injected timeout).  Reading
+        # it as "no dependence" would unsoundly prune a real edge — case
+        # feasibility is decided once at construction — so degrade to a
+        # conservative slack instead: any lower bound on the true minimum
+        # under-estimates the slack, which *over*-serializes the schedule
+        # (edge lower = delay - slack grows).  Sound, possibly suboptimal.
+        lb = res.bound
+        if lb is None:
+            # no root LP bound either: fall back to the box lower bound of
+            # the objective over the variable bounds
+            lb = sum(cj * (bounds[j][0] if cj > 0 else bounds[j][1])
+                     for j, cj in enumerate(c) if cj)
+        slack = int(math.floor(lb + 1e-6))
+        dkey = (X.uid, Y.uid, carry_level)
+        if dkey not in self._degraded_keys:
+            self._degraded_keys.add(dkey)
+            info = {"src": X.uid, "snk": Y.uid, "carry": carry_level,
+                    "status": res.status, "slack_bound": slack,
+                    "incumbent": None if res.fun is None else int(round(res.fun)),
+                    "gap": res.gap}
+            self.degradations.append(info)
+            faults.note("solver-degraded", **info)
+        return slack
 
     def _pair_slack(self, pair: _Pair, iis: dict[int, int]) -> Optional[int]:
         """min slack over the pair's feasible happens-before cases."""

@@ -1,0 +1,36 @@
+"""Typed compile-failure taxonomy (DESIGN.md §9).
+
+Every failure the compiler can surface to a caller is a :class:`CompileError`
+subclass, so `hls.compile` users can distinguish "your spec is unsatisfiable"
+from "the environment misbehaved" without string-matching.  Transient faults
+(worker crashes, torn cache blobs) are normally *recovered* — retried,
+quarantined, or repaired — and reported through ``CompileResult.diagnostics``
+rather than raised; these types cover the cases where recovery is impossible
+or the caller asked for strictness.
+"""
+from __future__ import annotations
+
+
+class CompileError(Exception):
+    """Base class for all structured compilation failures."""
+
+
+class ScheduleInfeasible(CompileError):
+    """No feasible static schedule exists for the requested configuration.
+
+    Also raised when conservative solver degradation leaves the II search
+    without a provably feasible point — an honest failure, never a silently
+    wrong schedule.
+    """
+
+
+class SolverTruncated(CompileError):
+    """An ILP search was cut off (deadline/node cap) with no usable bound."""
+
+
+class WorkerFault(CompileError):
+    """A DSE pool worker failed permanently (quarantined after retries)."""
+
+
+class CacheFault(CompileError):
+    """The persistent cache is unusable beyond per-entry repair."""

@@ -10,13 +10,23 @@ delay-register-minimization objective.
 """
 from __future__ import annotations
 
+import hashlib
 import math
+import time
 from dataclasses import dataclass
 from typing import Optional, Sequence
 
 import numpy as np
 
+from . import faults
+
 TOL = 1e-7
+
+#: process-wide default wall-clock budget for a single ``solve_ilp`` call,
+#: in seconds.  ``None`` (the default) preserves the historical behaviour of
+#: running until ``max_nodes``; callers with latency contracts pass
+#: ``deadline_s`` explicitly.
+DEFAULT_DEADLINE_S: Optional[float] = None
 
 
 @dataclass
@@ -189,13 +199,37 @@ def solve_lp(c: Sequence[float],
 
 @dataclass
 class ILPResult:
+    """Outcome of a branch-and-bound search.
+
+    Status lattice (DESIGN.md §9):
+
+    - ``"optimal"``    — tree exhausted, or the incumbent meets the root LP
+      bound; ``x``/``fun`` are the proven optimum.
+    - ``"feasible"``   — search truncated (deadline or node cap) with an
+      incumbent in hand; ``fun`` is an upper bound on the optimum, ``bound``
+      a lower bound, ``gap = fun - bound`` the optimality gap.
+    - ``"timeout"``    — search truncated before any incumbent was found;
+      ``bound`` still carries the root LP lower bound when available.
+      NOT a verdict about feasibility.
+    - ``"infeasible"`` — the fully-explored tree proves no integer point
+      satisfies the constraints.
+    - ``"unbounded"``  — the relaxation is unbounded below.
+    """
     status: str
     x: Optional[np.ndarray]
     fun: Optional[float]
+    bound: Optional[float] = None  # best proven lower bound on the optimum
+    gap: Optional[float] = None    # fun - bound when both are known
+    nodes: int = 0                 # branch-and-bound nodes expanded
 
     @property
     def ok(self) -> bool:
         return self.status == "optimal"
+
+    @property
+    def truncated(self) -> bool:
+        """True when the search was cut off before reaching a verdict."""
+        return self.status in ("feasible", "timeout")
 
 
 def _presolve(n: int,
@@ -308,19 +342,40 @@ def _presolve(n: int,
     return A_ub2, b_ub2, A_eq2, b_eq2, bounds2
 
 
+def _problem_key(c, A_ub, b_ub, A_eq, b_eq, bounds) -> str:
+    """Content digest of a solve_ilp call, for deterministic fault firing."""
+    h = hashlib.sha256()
+    h.update(np.ascontiguousarray(c, dtype=np.float64).tobytes())
+    for arr in (A_ub, b_ub, A_eq, b_eq):
+        h.update(b"|")
+        if arr is not None:
+            h.update(np.ascontiguousarray(
+                np.asarray(arr, dtype=np.float64)).tobytes())
+    h.update(repr(list(bounds)).encode())
+    return h.hexdigest()[:16]
+
+
 def solve_ilp(c: Sequence[float],
               A_ub: Optional[np.ndarray] = None,
               b_ub: Optional[np.ndarray] = None,
               A_eq: Optional[np.ndarray] = None,
               b_eq: Optional[np.ndarray] = None,
               bounds: Optional[Sequence[tuple[int, int]]] = None,
-              max_nodes: int = 4000) -> ILPResult:
+              max_nodes: int = 4000,
+              deadline_s: Optional[float] = None) -> ILPResult:
     """Minimize c@x over integer x with optional per-variable (lo, hi) bounds.
 
     Presolve (singleton rows, bound tightening) then branch-and-bound over
     the LP relaxation, exiting early when the root LP is already integral or
     an incumbent matches the root bound.  Variables default to x >= 0; pass
     ``bounds`` to shift/cap them (bounds may be negative; we shift internally).
+
+    ``deadline_s`` is a wall-clock budget (falls back to the module-level
+    ``DEFAULT_DEADLINE_S``).  An exceeded budget — like an exceeded
+    ``max_nodes`` — yields an *anytime* answer: ``"feasible"`` with the
+    incumbent and bound gap, or ``"timeout"`` with just the root bound.
+    The root node is always expanded, so a bound is produced whenever the
+    relaxation is solvable.
     """
     c = np.asarray(c, dtype=np.float64)
     n = c.shape[0]
@@ -330,6 +385,16 @@ def solve_ilp(c: Sequence[float],
         A_ub = np.asarray(A_ub, np.float64).reshape(-1, n)
     if A_eq is not None and len(A_eq):
         A_eq = np.asarray(A_eq, np.float64).reshape(-1, n)
+    budget = deadline_s if deadline_s is not None else DEFAULT_DEADLINE_S
+    t0 = time.monotonic() if budget is not None else 0.0
+    # injected fault: the deadline strikes right after the root LP
+    # relaxation — a bound but no incumbent, the tightest truncation a real
+    # anytime run can produce (real budgets additionally accept an integral
+    # root, which is why the fault path must refuse it: root-integral
+    # problems would otherwise never truncate)
+    forced_timeout = (faults.active() is not None and faults.should_fire(
+        "solver_timeout", key=_problem_key(c, A_ub, b_ub, A_eq, b_eq,
+                                           bounds)))
     pre = _presolve(n, A_ub, b_ub, A_eq, b_eq, bounds)
     if pre is None:
         return ILPResult("infeasible", None, None)
@@ -370,14 +435,23 @@ def solve_ilp(c: Sequence[float],
     stack = [(A0, b0)]
     nodes = 0
     root_bound: Optional[float] = None
+    proven = False  # incumbent met the root LP bound: optimal despite stack
+    cut = False     # search truncated (deadline or injected fault)
     while stack and nodes < max_nodes:
+        if nodes > 0 and budget is not None and \
+                time.monotonic() - t0 >= budget:
+            cut = True
+            break  # deadline: fall through to the anytime summary
         nodes += 1
         A_cur, b_cur = stack.pop()
         res = solve_lp(c, A_cur, b_cur, A_eq_s, b_eq_s)
         if nodes == 1 and res.ok:
             root_bound = res.fun  # LP relaxation bound: proves optimality early
+            if forced_timeout:
+                cut = True
+                break
         if res.status == "unbounded":
-            return ILPResult("unbounded", None, None)
+            return ILPResult("unbounded", None, None, nodes=nodes)
         if not res.ok:
             continue
         if res.fun is not None and res.fun >= best_val - 1e-9:
@@ -397,6 +471,7 @@ def solve_ilp(c: Sequence[float],
                 best_val = val
                 best_x = xi
                 if root_bound is not None and best_val <= root_bound + 1e-6:
+                    proven = True
                     break  # incumbent meets the root LP bound: optimal
             continue
         lo_branch = math.floor(x[frac_idx])
@@ -412,12 +487,26 @@ def solve_ilp(c: Sequence[float],
         stack.append((A1, b1))
         stack.append((A2, b2))
 
+    # the root LP optimum (plus the shift) is a valid lower bound on the
+    # integer optimum for the whole tree
+    bound_out = None if root_bound is None else root_bound + const_shift
     if best_x is None:
-        # only a fully-explored tree proves infeasibility; hitting the node
-        # cap with branches left is a truncated search, not a verdict
-        return ILPResult("infeasible" if not stack else "iteration_limit",
-                         None, None)
-    return ILPResult("optimal", best_x + los.astype(np.int64), best_val + const_shift)
+        if stack or cut:
+            # truncated search (deadline, node cap or injected fault) with
+            # work left and no incumbent — NOT a verdict about feasibility
+            return ILPResult("timeout", None, None, bound=bound_out,
+                             nodes=nodes)
+        return ILPResult("infeasible", None, None, nodes=nodes)
+    fun = best_val + const_shift
+    x_out = best_x + los.astype(np.int64)
+    if (stack or cut) and not proven:
+        # incumbent in hand but the tree was cut off: honest "feasible" with
+        # the optimality gap, never a claimed optimum
+        gap = None if bound_out is None else max(0.0, fun - bound_out)
+        return ILPResult("feasible", x_out, fun, bound=bound_out, gap=gap,
+                         nodes=nodes)
+    return ILPResult("optimal", x_out, fun, bound=bound_out, gap=0.0,
+                     nodes=nodes)
 
 
 def brute_force_ilp(c, A_ub=None, b_ub=None, A_eq=None, b_eq=None, bounds=None):

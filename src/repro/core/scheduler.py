@@ -32,6 +32,10 @@ class Schedule:
     theta: dict[int, int]               # op uid -> absolute offset
     edges: list[DepEdge]
     feasible: bool = True
+    # "exact" when every dependence slack was solved to proven optimality;
+    # "degraded" when a truncated solver forced a conservative (sound but
+    # possibly over-serialized) bound somewhere — see DESIGN.md §9
+    provenance: str = "exact"
 
     # ------------------------------------------------------------------
     def t(self, op_uid: int, parent_uid: Optional[int]) -> int:
@@ -211,15 +215,23 @@ def schedule(p: Program, iis: dict[int, int],
              minimize_registers: bool = True) -> Schedule:
     dep = dep or DepAnalysis(p)
     nodes = dep.all_nodes()
+
+    def prov() -> str:
+        # evaluated at return time: slacks (and hence degradations) are
+        # computed lazily while the edges are being built
+        return "degraded" if getattr(dep, "degradations", None) else "exact"
+
     if not check_loop_occupancy(p, iis):
-        return Schedule(p, iis, {n.uid: 0 for n in nodes}, [], feasible=False)
+        return Schedule(p, iis, {n.uid: 0 for n in nodes}, [], feasible=False,
+                        provenance=prov())
     edges = build_edges(dep, iis)
     theta = longest_path(nodes, edges)
     if theta is None:
-        return Schedule(p, iis, {n.uid: 0 for n in nodes}, edges, feasible=False)
+        return Schedule(p, iis, {n.uid: 0 for n in nodes}, edges,
+                        feasible=False, provenance=prov())
     if minimize_registers:
         theta = _minimize_delays(p, theta, edges)
-    return Schedule(p, iis, theta, edges, feasible=True)
+    return Schedule(p, iis, theta, edges, feasible=True, provenance=prov())
 
 
 def feasible(p: Program, iis: dict[int, int], dep: DepAnalysis) -> bool:

@@ -45,12 +45,14 @@ from __future__ import annotations
 
 import copy
 import itertools
+import math
 import time
 from dataclasses import dataclass, replace as dc_replace
 from typing import Callable, Optional, Sequence
 
 import numpy as np
 
+from . import faults
 from .ilp import solve_ilp
 from .ir import (AffExpr, ArithOp, ConstOp, LoadOp, Loop, Program, StoreOp,
                  aff, iv, normalize)
@@ -685,12 +687,23 @@ def _fusion_hazard(opA, opB, loopsA: list[Loop], loopsB: list[Loop],
         row[d + lvl], row[lvl] = 1.0, -1.0
         res = solve_ilp(c, np.asarray([row]), np.asarray([-1.0 - sh[lvl]]),
                         np.asarray(A_eq), np.asarray(b_eq), bounds=bounds)
+        if res.status == "feasible":
+            # c == 0: any integral point — truncated search or not — is a
+            # concrete witness of the hazard
+            return True
         if res.ok:
             return True
-        if res.status != "infeasible":
+        if res.status == "infeasible":
+            continue
+        if not res.truncated:
             raise RuntimeError(
                 f"fusion legality ILP unresolved ({res.status}) for "
                 f"{opA!r} / {opB!r}")
+        # truncated with no witness either way: conservatively report a
+        # hazard, which refuses (or shifts) the fusion — legal, suboptimal
+        faults.note("fusion-hazard-degraded", status=res.status,
+                    src=repr(opA), snk=repr(opB), level=lvl)
+        return True
     return False
 
 
@@ -758,6 +771,19 @@ def _max_dep_distance(opA, opB, loopsA: list[Loop], loopsB: list[Loop],
         return int(round(-res.fun))
     if res.status == "infeasible":
         return None
+    if res.truncated:
+        # maximizing the distance as min(-dist): -bound upper-bounds the
+        # true maximum, so a shift covering it still covers every real
+        # dependence — a legal, possibly over-shifted fusion.  With no root
+        # bound at all, the box bound over the level's variable ranges
+        # serves the same role.
+        if res.bound is not None:
+            dist = int(math.ceil(-res.bound - 1e-9))
+        else:
+            dist = (loopsA[level].ub - 1) - loopsB[level].lb
+        faults.note("dep-distance-degraded", status=res.status,
+                    distance_bound=dist, src=repr(opA), snk=repr(opB))
+        return dist
     raise TransformError(
         f"dependence-distance ILP unresolved ({res.status}) for "
         f"{opA!r} / {opB!r}")

@@ -19,6 +19,20 @@ DEFAULT_TIMEOUT = int(os.environ.get("REPRO_TEST_TIMEOUT", "120"))
 # via monkeypatch (REPRO_HLS_CACHE=1 + REPRO_HLS_CACHE_DIR).
 os.environ["REPRO_HLS_CACHE"] = "0"
 
+# No fault plan leaks in from the calling environment: chaos tests opt in
+# explicitly via repro.core.faults.inject(...).
+os.environ.pop("REPRO_HLS_FAULTS", None)
+
+
+@pytest.fixture(autouse=True)
+def _fault_free():
+    """Reset the fault-injection harness around every test so a failing
+    chaos test can never leave a plan armed for its neighbours."""
+    from repro.core import faults
+    faults.reset()
+    yield
+    faults.reset()
+
 
 @pytest.fixture(autouse=True)
 def _timeout_guard(request):

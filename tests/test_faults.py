@@ -1,0 +1,374 @@
+"""Chaos suite for the fault-injection harness (DESIGN.md §9).
+
+Every test runs under ``tests/conftest.py``'s SIGALRM guard, so "the compiler
+terminated" is enforced by the suite itself: a hang fails the test instead of
+stalling tier-1.  The scenarios mirror the failure-handling contract:
+
+* truncated solvers degrade to conservative (sound) bounds, never infeasible;
+* worker crashes/hangs are retried, rebuilt around, or quarantined — and the
+  frontier stays bit-identical to serial whenever the faults were recovered;
+* torn/corrupt cache blobs are detected, discarded and recompiled;
+* a faulted ``hls.compile`` either reproduces the fault-free frontier exactly
+  or labels the result ``provenance="degraded"`` with diagnostics.
+"""
+import importlib
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (CacheFault, CompileError, DepAnalysis,
+                        ScheduleInfeasible, SolverTruncated, WorkerFault,
+                        faults, hls, schedule)
+from repro.core.cache import CacheStore
+from repro.core.ilp import solve_ilp
+from repro.core.programs import CHAIN_BENCHMARKS, blur_chain
+from repro.core.transforms import FuseProducerConsumer, differential_check
+
+autotune_mod = importlib.import_module("repro.core.autotune")
+sim = importlib.import_module("repro.core.sim")
+
+
+def _frontier_sig(r):
+    """Everything observable about a frontier, for byte-identity checks.
+    Op uids are normalized to program walk order so signatures compare
+    across independently built (but structurally identical) programs."""
+    out = []
+    for c in r.frontier:
+        prog = c.schedule.program
+        order = {n.uid: i for i, (n, _) in enumerate(prog.walk())}
+        out.append((c.desc, int(c.latency), tuple(sorted(c.res.items())),
+                    tuple(sorted((order[u], v)
+                                 for u, v in c.schedule.iis.items())),
+                    tuple(sorted((order[u], t)
+                                 for u, t in c.schedule.theta.items()))))
+    return out
+
+
+def _search(max_candidates=6, **kw):
+    kw.setdefault("cache", False)
+    return hls.SearchConfig(max_candidates=max_candidates, **kw)
+
+
+# ---------------------------------------------------------------------------
+# The plan itself: determinism, scoping, serialization
+# ---------------------------------------------------------------------------
+
+
+def test_should_fire_is_content_keyed_and_deterministic():
+    with faults.inject(seed=7, worker_crash=0.5):
+        first = [faults.should_fire("worker_crash", key=f"cand-{i}")
+                 for i in range(64)]
+    with faults.inject(seed=7, worker_crash=0.5):
+        # different consultation order, same keys -> same decisions
+        second = {i: faults.should_fire("worker_crash", key=f"cand-{i}")
+                  for i in reversed(range(64))}
+    assert first == [second[i] for i in range(64)]
+    assert any(first) and not all(first)  # rate 0.5 actually splits
+    with faults.inject(seed=8, worker_crash=0.5):
+        third = [faults.should_fire("worker_crash", key=f"cand-{i}")
+                 for i in range(64)]
+    assert third != first  # the seed matters
+
+
+def test_should_fire_rate_extremes_and_script():
+    with faults.inject(seed=0, solver_timeout=1.0):
+        assert faults.should_fire("solver_timeout", key="x")
+        assert not faults.should_fire("worker_crash", key="x")  # rate 0
+    with faults.inject(seed=0, script=(("worker_crash", (1, 3)),)):
+        fired = [faults.should_fire("worker_crash") for _ in range(5)]
+    assert fired == [False, True, False, True, False]
+
+
+def test_inject_scopes_and_restores():
+    assert faults.active() is None
+    outer_env = os.environ.get(faults.ENV_VAR)
+    with faults.inject(seed=1, cache_corrupt=0.5) as plan:
+        assert faults.active() is plan
+        assert os.environ[faults.ENV_VAR] == plan.to_json()
+        with faults.inject(seed=2, worker_hang=1.0) as inner:
+            assert faults.active() is inner
+        assert faults.active() is plan
+    assert faults.active() is None
+    assert os.environ.get(faults.ENV_VAR) == outer_env
+
+
+def test_plan_json_roundtrip():
+    plan = faults.FaultPlan(seed=9, solver_timeout=0.25, worker_crash=0.5,
+                            hang_seconds=1.5, crash_attempts=(0, 2),
+                            script=(("cache_corrupt", (4,)),))
+    assert faults.FaultPlan.from_json(plan.to_json()) == plan
+
+
+def test_error_taxonomy():
+    for sub in (ScheduleInfeasible, SolverTruncated, WorkerFault, CacheFault):
+        assert issubclass(sub, CompileError)
+    assert issubclass(CompileError, Exception)
+
+
+# ---------------------------------------------------------------------------
+# Solver: injected timeouts produce honest anytime statuses
+# ---------------------------------------------------------------------------
+
+
+def test_injected_solver_timeout_truncates_any_problem():
+    # fault-free: a trivially optimal problem
+    r = solve_ilp([1.0, 1.0], bounds=[(0, 3), (0, 3)])
+    assert r.status == "optimal"
+    with faults.inject(seed=0, solver_timeout=1.0):
+        r = solve_ilp([1.0, 1.0], bounds=[(0, 3), (0, 3)])
+    assert r.status == "timeout" and r.truncated and not r.ok
+    # deadline struck right after the relaxation: a bound, no incumbent
+    assert r.x is None
+    assert r.bound is not None and r.bound <= 0.0 + 1e-9
+
+
+def test_injected_timeout_is_deterministic_per_problem():
+    probs = [([float(i), 1.0], [(0, i + 1), (0, 3)]) for i in range(20)]
+    with faults.inject(seed=5, solver_timeout=0.5):
+        a = [solve_ilp(c, bounds=b).status for c, b in probs]
+    with faults.inject(seed=5, solver_timeout=0.5):
+        b_ = [solve_ilp(c, bounds=b).status for c, b in reversed(probs)]
+    assert a == list(reversed(b_))
+    assert set(a) == {"optimal", "timeout"}  # rate 0.5 splits
+
+
+# ---------------------------------------------------------------------------
+# Dependence analysis + scheduler: sound conservative degradation
+# ---------------------------------------------------------------------------
+
+
+def test_deps_degrade_conservative_and_sound():
+    p = blur_chain(8, storage="bram")
+    dep = DepAnalysis(p, fastpath=False)
+    iis = autotune_mod.autotune(p, dep)
+    s_exact = schedule(p, iis, dep)
+    assert s_exact.feasible and s_exact.provenance == "exact"
+
+    with faults.inject(seed=3, solver_timeout=1.0):
+        p2 = blur_chain(8, storage="bram")
+        dep_d = DepAnalysis(p2, fastpath=False)
+        # truncated slacks may over-serialize: let the autotuner re-find
+        # feasible IIs under the degraded bounds, as compile_program would
+        iis_d = autotune_mod.autotune(p2, dep_d)
+        s_d = schedule(p2, iis_d, dep_d)
+        assert dep_d.degradations, "full truncation must degrade some slack"
+        assert s_d.provenance == "degraded"
+        assert s_d.feasible, "degraded bounds must stay schedulable"
+        # soundness: the over-serialized schedule still honors every real
+        # dependence and port constraint
+        assert sim.validate_schedule(p2, s_d) == []
+        # conservatism: degraded bounds can only slow the design down
+        assert s_d.completion_time() >= s_exact.completion_time()
+
+
+def test_degradation_recorded_once_per_case():
+    with faults.inject(seed=3, solver_timeout=1.0):
+        p = blur_chain(8, storage="bram")
+        dep = DepAnalysis(p, fastpath=False)
+        autotune_mod.autotune(p, dep)  # many probes over the same cases
+        keys = [(d["src"], d["snk"], d["carry"]) for d in dep.degradations]
+        assert len(keys) == len(set(keys))
+        for d in dep.degradations:
+            assert d["status"] in ("feasible", "timeout")
+
+
+def test_fusion_under_truncation_stays_correct():
+    p = blur_chain(8, storage="bram")
+    with faults.inject(seed=2, solver_timeout=1.0):
+        q = FuseProducerConsumer().apply(blur_chain(8, storage="bram"))
+        # whatever the conservative legality checks decided, the transformed
+        # program must still compute the same function
+        differential_check(p, q, seeds=(0,))
+
+
+# ---------------------------------------------------------------------------
+# Cache: torn writes and corrupt reads are detected and repaired
+# ---------------------------------------------------------------------------
+
+
+def test_cache_torn_put_detected_on_next_get(tmp_path):
+    store = CacheStore(str(tmp_path))
+    with faults.inject(seed=0, cache_corrupt=1.0):
+        store.put("deadbeef", {"v": 1})  # writer "dies" mid-write
+    fresh = CacheStore(str(tmp_path))
+    assert fresh.get("deadbeef") is None
+    assert fresh.repairs == 1
+    # the poisoned entry was unlinked: the next get is a clean miss
+    assert fresh.get("deadbeef") is None and fresh.repairs == 1
+    fresh.put("deadbeef", {"v": 2})
+    assert CacheStore(str(tmp_path)).get("deadbeef") == {"v": 2}
+
+
+def test_cache_corrupt_get_repairs_and_recovers(tmp_path):
+    store = CacheStore(str(tmp_path))
+    store.put("cafebabe", {"v": [1, 2, 3]})
+    fresh = CacheStore(str(tmp_path))
+    with faults.inject(seed=0, cache_corrupt=1.0):
+        assert fresh.get("cafebabe") is None  # torn read detected
+    assert fresh.repairs == 1
+    assert fresh.stats()["repairs"] == 1
+    # entry was discarded; a clean re-put round-trips again
+    fresh.put("cafebabe", {"v": 4})
+    assert CacheStore(str(tmp_path)).get("cafebabe") == {"v": 4}
+
+
+def test_cache_checksum_catches_bit_flip(tmp_path):
+    store = CacheStore(str(tmp_path))
+    store.put("abcd1234", {"latency": 100})
+    path = store._path("abcd1234")
+    raw = open(path).read()
+    flipped = raw.replace("100", "999")
+    assert flipped != raw
+    with open(path, "w") as f:
+        f.write(flipped)
+    fresh = CacheStore(str(tmp_path))
+    assert fresh.get("abcd1234") is None  # checksum mismatch -> repair
+    assert fresh.repairs == 1
+
+
+def test_cache_wrapper_carries_checksum(tmp_path):
+    store = CacheStore(str(tmp_path))
+    store.put("0123abcd", {"x": 1.5})
+    wrapper = json.load(open(store._path("0123abcd")))
+    assert set(wrapper) >= {"salt", "sum", "data"}
+    assert wrapper["sum"] == CacheStore._checksum(
+        json.dumps(wrapper["data"], separators=(",", ":")))
+
+
+# ---------------------------------------------------------------------------
+# Supervised parallel DSE: crash / hang / hard-crash / quarantine
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def clean_frontier():
+    r = hls.compile(blur_chain(), search=_search())
+    assert r.provenance == "exact"
+    return _frontier_sig(r)
+
+
+def test_worker_crash_once_recovers_identically(clean_frontier):
+    with faults.inject(seed=0, worker_crash=1.0, crash_attempts=(0,)):
+        r = hls.compile(blur_chain(), search=_search(jobs=2))
+    # every first attempt crashed, every retry succeeded: recovered faults
+    # must not move the frontier or taint provenance
+    assert _frontier_sig(r) == clean_frontier
+    assert r.provenance == "exact" and not r.degraded
+    kinds = {d["kind"] for d in r.diagnostics}
+    assert "worker-retry" in kinds
+
+
+def test_worker_always_crashing_quarantines(clean_frontier):
+    with faults.inject(seed=0, worker_crash=1.0):
+        r = hls.compile(blur_chain(), search=_search(jobs=2))
+    assert any("worker-fault" in reason for _, reason in r.rejected)
+    assert r.degraded  # quarantine may have hidden frontier points
+    assert any(d["kind"] == "worker-quarantine" for d in r.diagnostics)
+
+
+def test_worker_hang_deadline_then_recovery(clean_frontier):
+    with faults.inject(seed=0, worker_hang=1.0, hang_attempts=(0,),
+                       hang_seconds=20.0):
+        r = hls.compile(blur_chain(),
+                        search=_search(jobs=2, worker_deadline_s=0.75))
+    assert _frontier_sig(r) == clean_frontier
+    assert r.provenance == "exact"
+    assert any(d["kind"] == "worker-hang" for d in r.diagnostics)
+
+
+def test_worker_hard_crash_pool_rebuild(clean_frontier):
+    with faults.inject(seed=0, worker_crash_hard=1.0, crash_attempts=(0,)):
+        r = hls.compile(blur_chain(), search=_search(jobs=2))
+    assert _frontier_sig(r) == clean_frontier
+    assert r.provenance == "exact"
+    assert any(d["kind"] == "pool-broken" for d in r.diagnostics)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end chaos acceptance: identical-or-labeled, deterministic
+# ---------------------------------------------------------------------------
+
+_CHAOS_PLANS = [
+    dict(seed=0, solver_timeout=0.4),
+    dict(seed=1, solver_timeout=0.2, cache_corrupt=0.3),
+    dict(seed=2, solver_timeout=1.0),
+]
+
+
+def _chaos_once(make_program, plan, **search_kw):
+    with faults.inject(**plan):
+        return hls.compile(make_program(), search=_search(**search_kw))
+
+
+@pytest.mark.parametrize("plan", _CHAOS_PLANS,
+                         ids=[f"seed{p['seed']}" for p in _CHAOS_PLANS])
+def test_chaos_identical_or_labeled(clean_frontier, plan):
+    r = _chaos_once(blur_chain, plan)
+    if _frontier_sig(r) != clean_frontier:
+        assert r.degraded, \
+            "divergent frontier without degraded provenance is unsound"
+        assert any(d["kind"] in faults.DEGRADING_KINDS
+                   for d in r.diagnostics), r.diagnostics
+        for c in r.frontier:
+            assert c.schedule.feasible
+    else:
+        # byte-identical results need no degraded label even if recovered
+        # faults fired along the way
+        pass
+
+
+def test_chaos_deterministic_for_fixed_seed():
+    plan = dict(seed=1, solver_timeout=0.4)
+    a = _chaos_once(blur_chain, plan)
+    b = _chaos_once(blur_chain, plan)
+    assert _frontier_sig(a) == _frontier_sig(b)
+    assert a.provenance == b.provenance
+    assert a.rejected == b.rejected
+    assert [d["kind"] for d in a.diagnostics] == \
+        [d["kind"] for d in b.diagnostics]
+
+
+def test_chaos_with_persistent_cache(tmp_path, monkeypatch, clean_frontier):
+    monkeypatch.setenv("REPRO_HLS_CACHE", "1")
+    monkeypatch.setenv("REPRO_HLS_CACHE_DIR", str(tmp_path))
+    # degraded run first: whatever it computed must NOT poison the store
+    r_fault = _chaos_once(blur_chain, dict(seed=2, solver_timeout=1.0),
+                          cache=True)
+    assert r_fault.degraded
+    r_clean = hls.compile(blur_chain(), search=_search(cache=True))
+    assert r_clean.provenance == "exact"
+    assert _frontier_sig(r_clean) == clean_frontier
+
+
+def test_chaos_cache_disabled_still_completes():
+    # conftest pins REPRO_HLS_CACHE=0; faults must not reintroduce a need
+    # for the store
+    assert os.environ.get("REPRO_HLS_CACHE") == "0"
+    r = _chaos_once(blur_chain, dict(seed=0, solver_timeout=0.5,
+                                     cache_corrupt=0.5))
+    assert r.frontier or r.degraded
+
+
+def test_explain_reports_diagnostics():
+    r = _chaos_once(blur_chain, dict(seed=2, solver_timeout=1.0))
+    assert r.degraded
+    text = r.explain()
+    assert "diagnostics (degraded)" in text
+    assert "solver-degraded" in text or "fusion-hazard-degraded" in text
+
+
+@pytest.mark.slow
+@pytest.mark.timeout(1800)
+@pytest.mark.parametrize("name", sorted(CHAIN_BENCHMARKS))
+def test_chaos_sweep_chain_benchmarks(name):
+    mk = CHAIN_BENCHMARKS[name]
+    clean = hls.compile(mk(), search=_search())
+    ref = _frontier_sig(clean)
+    for seed in range(4):
+        for plan in (dict(seed=seed, solver_timeout=0.3),
+                     dict(seed=seed, solver_timeout=0.7, cache_corrupt=0.5)):
+            r = _chaos_once(mk, plan)
+            if _frontier_sig(r) != ref:
+                assert r.degraded, (name, plan)

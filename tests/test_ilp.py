@@ -64,3 +64,62 @@ def test_ilp_negative_bounds_shift():
     # min x st x >= -3  -> -3
     r = solve_ilp([1.0], bounds=[(-3, 3)])
     assert r.ok and r.fun == -3 and r.x[0] == -3
+
+
+# ---------------------------------------------------------------------------
+# Anytime behaviour: truncated searches must report honest statuses
+# ---------------------------------------------------------------------------
+
+# A 0/1 knapsack whose incumbent after 3 branch-and-bound nodes is NOT the
+# optimum (value 21 vs 33): the old solver reported "optimal" whenever an
+# incumbent existed at the node cap, silently returning a suboptimal point
+# as the truth.
+_KNAP_V = [13.0, 16.0, 1.0, 4.0, 4.0, 8.0]
+_KNAP_W = [10.0, 4.0, 6.0, 3.0, 5.0, 8.0]
+_KNAP_CAP = 18.0
+
+
+def _knapsack(max_nodes=4000, deadline_s=None):
+    return solve_ilp([-v for v in _KNAP_V],
+                     A_ub=np.array([_KNAP_W]), b_ub=np.array([_KNAP_CAP]),
+                     bounds=[(0, 1)] * len(_KNAP_V),
+                     max_nodes=max_nodes, deadline_s=deadline_s)
+
+
+def test_ilp_truncated_incumbent_is_feasible_not_optimal():
+    full = _knapsack()
+    assert full.status == "optimal" and full.fun == -33.0
+    trunc = _knapsack(max_nodes=3)
+    assert trunc.status == "feasible"          # honest: search was cut short
+    assert trunc.truncated and not trunc.ok
+    assert trunc.fun > full.fun                # incumbent is NOT the optimum
+    assert trunc.bound is not None and trunc.bound <= full.fun + 1e-9
+    assert trunc.gap is not None and trunc.gap >= trunc.fun - full.fun - 1e-9
+    assert trunc.nodes == 3
+
+
+def test_ilp_deadline_truncates_with_bound():
+    # deadline hit after the root: either we still prove optimality at the
+    # root (not here: fractional LP relaxation) or we report the truncation.
+    r = _knapsack(deadline_s=0.0)
+    assert r.status in ("feasible", "timeout")
+    assert r.truncated
+    assert r.bound is not None and r.bound <= -33.0 + 1e-9
+    if r.status == "feasible":
+        assert r.x is not None
+        assert float(np.dot(_KNAP_W, r.x)) <= _KNAP_CAP + 1e-9  # sound point
+
+
+def test_ilp_optimal_has_zero_gap_and_node_count():
+    r = _knapsack()
+    assert r.status == "optimal" and r.gap == 0.0 and r.nodes >= 1
+    assert r.bound is not None and r.bound <= r.fun + 1e-9
+
+
+def test_ilp_integral_root_is_proven_even_under_deadline():
+    # The root LP is integral -> provenly optimal on the very first node,
+    # deadline notwithstanding (the root is always expanded).
+    r = solve_ilp([1.0, 1.0], A_ub=np.array([[-1.0, 0.0]]),
+                  b_ub=np.array([-2.0]), bounds=[(0, 5), (0, 5)],
+                  deadline_s=0.0)
+    assert r.status == "optimal" and r.fun == 2.0
