@@ -44,7 +44,8 @@ def run(emit):
     got = ops.stencil_pipeline(img, wx, wx, interpret=True)
     err = float(jnp.max(jnp.abs(got - ref.stencil_pipeline_ref(img, wx, wx))))
     rows.append(("kernel.stencil_pipeline.ref_us", us, f"maxerr={err:.1e}"))
-    br, halo = ops.stencil_dse_config()
+    from repro.kernels.stencil_pipeline import _stencil_codegen_config
+    br, halo = _stencil_codegen_config()
     rows.append(("kernel.stencil_pipeline.dse_config", 0.0,
                  f"block_rows={br};halo={halo}"))
     rows.append(("kernel.stencil_pipeline.ilp_halo_rows_fallback", 0.0,

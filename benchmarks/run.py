@@ -1,8 +1,17 @@
 """Benchmark harness — one section per paper table/figure + the framework's
-own dry-run/roofline tables.  Prints ``name,us_per_call,derived`` CSV."""
+own dry-run/roofline tables.  Prints ``name,us_per_call,derived`` CSV.
+
+``python benchmarks/run.py`` runs everything; ``python benchmarks/run.py
+SUITE`` runs one suite.  Unknown suite names are a hard argparse error (the
+old ``sys.argv[1]`` filter silently ran nothing).
+"""
 from __future__ import annotations
 
-import sys
+import argparse
+
+#: every runnable suite — argparse rejects anything else
+SUITES = ("paper", "reg", "bram", "dse", "pareto", "dse-perf", "faults",
+          "fusion", "codegen", "pipeline", "kernels", "roofline")
 
 
 def _emit(rows):
@@ -10,10 +19,14 @@ def _emit(rows):
         print(f"{name},{us:.1f},{derived}")
 
 
-def main() -> None:
-    from benchmarks import paper
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="Run the benchmark suites (all by default).")
+    ap.add_argument("suite", nargs="?", choices=SUITES, metavar="suite",
+                    help=f"one of: {', '.join(SUITES)}")
+    only = ap.parse_args(argv).suite
 
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    from benchmarks import paper
 
     for storage in ("reg", "bram"):
         if only and only not in ("paper", storage):
@@ -85,8 +98,20 @@ def main() -> None:
         # always re-run: this section verifies every fused candidate
         # differentially and the winner against the brute-force oracles
         res = paper.compute_fusion(storage="bram", force=True)
-        _emit([(f"fusion.bram.{n}", us, d)
-               for n, us, d in paper.fusion_table(res)])
+        _emit([(f"fusion.bram.{n}", us, d) for n, us, d in paper.fusion_table(res)])
+
+    if only in (None, "codegen"):
+        print("# === codegen — generated Pallas kernels: measured wall-clock "
+              "(interpret, double vs single buffering) next to modeled "
+              "latency (DESIGN.md §10) ===")
+        # always re-run: this section IS the modeled-vs-measured drift gate
+        # (it raises when double-buffering stops beating single on >= 2
+        # chains, outputs stop being bit-identical across bufferings, a
+        # kernel diverges from sequential_exec, or a chain's normalized
+        # measured/modeled ratio leaves the pinned band)
+        res = paper.compute_codegen(storage="bram", force=True)
+        _emit([(f"codegen.bram.{n}", us, d)
+               for n, us, d in paper.codegen_table(res)])
 
     if only in (None, "pipeline"):
         try:

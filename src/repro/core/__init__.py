@@ -15,7 +15,8 @@ from .ir import (AffExpr, ArrayDecl, ArithOp, ConstOp, LoadOp, Loop, Program,
 from .ilp import solve_ilp, solve_lp, brute_force_ilp
 from . import faults
 from .errors import (CacheFault, CompileError, ScheduleInfeasible,
-                     SolverTruncated, WorkerFault)
+                     SolverTruncated, UnlowerableProgram, WorkerFault)
+from .codegen import PallasKernel, lower_program
 from .deps import DepAnalysis, DepEdge
 from .scheduler import Schedule, schedule, feasible, emit_hir
 from .transforms import (ArrayPartition, FuseProducerConsumer, LoopTile,
@@ -51,7 +52,8 @@ __all__ = [
     "hls", "CompileSpec", "CompileResult", "Target", "Objective",
     "Constraint", "constraint", "minimize", "SearchConfig", "DesignPoint",
     "faults", "CompileError", "ScheduleInfeasible", "SolverTruncated",
-    "WorkerFault", "CacheFault",
+    "WorkerFault", "CacheFault", "UnlowerableProgram",
+    "PallasKernel", "lower_program",
     # deprecated shims, served lazily with a DeprecationWarning:
     "compile_program", "explore",
 ]

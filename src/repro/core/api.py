@@ -315,6 +315,18 @@ class CompileResult:
 
         return min(pts, key=lambda c: (dist(c), c.objectives()))
 
+    def emit_pallas(self, point: Optional[DesignPoint] = None, *,
+                    buffering: str = "double",
+                    block_rows: Optional[int] = None,
+                    dtype: str = "float32"):
+        """Lower a frontier point (default: ``best``) to a generated Pallas
+        kernel (DESIGN.md §10).  Returns a :class:`repro.core.codegen.
+        PallasKernel`; raises :class:`UnlowerableProgram` — also recorded in
+        ``diagnostics`` — when the point's program has no lowering."""
+        from . import codegen
+        return codegen.emit_pallas(self, point=point, buffering=buffering,
+                                   block_rows=block_rows, dtype=dtype)
+
     def explain(self) -> str:
         """Per-candidate accept/reject reasons, frontier first."""
         lines = [f"objectives: " + ", ".join(

@@ -1,0 +1,806 @@
+"""Pallas codegen backend: lower a scheduled ``Program`` to a real kernel.
+
+This closes the modeled-vs-measured loop named in ROADMAP: after PRs 1-7 the
+DSE winner was a latency *number*; this module turns the winning design point
+into an executable Pallas kernel so ``benchmarks/run.py codegen`` can record
+measured wall-clock next to the modeled latency (BENCH_codegen.json).
+
+Two lowering strategies (DESIGN.md §10):
+
+* **streamed** ("Mode A") — for single-sink producer-consumer chains of
+  perfect depth-2 nests (the paper's Fig. 1 shape).  The sink's row loop is
+  strip-mined into a 1-D Pallas grid of ``T = ceil(Rout/block_rows)`` steps;
+  every producer stage is recomputed per grid step over exactly the *window*
+  of its rows the later stages consume.  Windows are derived by propagating
+  ``rows [a*t+b, a*t+b+sz)`` triples backward through the chain, which
+  generalizes the shift-and-peel fusion analysis: a producer's window
+  overhang ``sz - a`` IS the fusion's row shift (the VMEM line-buffer halo)
+  whenever the DSE fused that edge.  Intermediates live entirely in
+  registers/VMEM — they never materialize in HBM.
+
+  - ``buffering="double"`` emits the window reads against whole-array input
+    refs inside a gridded ``pallas_call`` with a per-tile output BlockSpec:
+    Pallas' grid pipeline machinery ping-pongs the output block buffers, so
+    tile ``t+1``'s refill overlaps tile ``t``'s compute.
+  - ``buffering="single"`` emits the same stage body inside a
+    ``lax.fori_loop`` over tiles with explicit ``pl.store`` of each tile —
+    one window, serialized refill/compute/store.  It exists as the
+    measurable baseline the double-buffered variant must beat.
+
+* **whole-array** ("Mode B") — the generic fallback for programs the
+  streamed contract rejects only *softly* (multi-store nests, strided or
+  transposed stores, reads of unwritten regions, multiple sinks): every
+  array becomes a whole VMEM ref, each nest is vectorized over its full
+  domain in program order, and partial stores update a value initialized
+  from the ref (so uncovered elements keep their initial values, exactly
+  like ``sim.sequential_exec``).
+
+Programs outside both contracts (imperfect or >2-deep nests — reductions,
+``two_mm``-style accumulations, multi-chain tasks ``_access_sequence``
+rejects) raise the structured :class:`UnlowerableProgram` instead of an
+opaque downstream failure; ``CompileResult.emit_pallas`` records the
+rejection in ``diagnostics``.
+
+The kernel is emitted as *source text* and ``exec``'d: the source is the
+debuggable artifact (``PallasKernel.source``), and the golden test asserts
+the generated blur-chain kernel is bit-exact against the hand-written
+``kernels/stencil_pipeline.py`` it generalizes.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from .errors import UnlowerableProgram
+from .ir import AffExpr, ArithOp, ConstOp, LoadOp, Loop, Program, StoreOp
+
+DEFAULT_BLOCK_ROWS = 8
+
+_ARITH_FMT = {
+    "add": "({} + {})",
+    "sub": "({} - {})",
+    "mul": "({} * {})",
+    "div": "({} / {})",
+    "min": "jnp.minimum({}, {})",
+    "max": "jnp.maximum({}, {})",
+    "cmp": "({} > {}).astype(DTYPE)",
+}
+
+
+def _ident(name: str) -> str:
+    return re.sub(r"\W", "_", name)
+
+
+def _vname(ssa: str) -> str:
+    return "v_" + _ident(ssa.lstrip("%"))
+
+
+# ---------------------------------------------------------------------------
+# Nest extraction + the hard (mode-independent) contract
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class _Access:
+    """One affine access, separability-checked: per array dim at most one
+    induction variable, ``coef * iv + const`` with coef >= 1, const >= 0."""
+
+    array: str
+    dims: list[tuple[Optional[str], int, int]]  # (iv | None, coef, const)
+
+
+@dataclass
+class _Nest:
+    loop: Loop
+    ivs: list[str]
+    trips: list[int]
+    ops: list  # innermost body, program order
+    loads: list[tuple[LoadOp, _Access]] = field(default_factory=list)
+    stores: list[tuple[StoreOp, _Access]] = field(default_factory=list)
+
+
+def _classify_access(nest_ivs, index, arr_shape, what, tag, hard):
+    dims = []
+    seen_ivs: set = set()
+    if len(index) != len(arr_shape):
+        hard.append(f"nest '{tag}': {what} rank {len(index)} != array rank "
+                    f"{len(arr_shape)}")
+        return None
+    if len(arr_shape) > 2:
+        hard.append(f"nest '{tag}': {what} of a rank-{len(arr_shape)} array "
+                    "(only 1-D/2-D arrays lower)")
+        return None
+    for e in index:
+        e = e if isinstance(e, AffExpr) else AffExpr({}, int(e))
+        if len(e.coeffs) > 1:
+            hard.append(f"nest '{tag}': non-separable {what} index {e!r}")
+            return None
+        if e.const < 0:
+            hard.append(f"nest '{tag}': negative {what} offset {e!r}")
+            return None
+        if e.coeffs:
+            (ivn, coef), = e.coeffs.items()
+            if ivn not in nest_ivs:
+                hard.append(f"nest '{tag}': {what} uses unknown iv '{ivn}'")
+                return None
+            if coef < 1:
+                hard.append(f"nest '{tag}': negative-stride {what} {e!r}")
+                return None
+            if ivn in seen_ivs:
+                hard.append(f"nest '{tag}': iv '{ivn}' in two {what} dims "
+                            "(diagonal access)")
+                return None
+            seen_ivs.add(ivn)
+            dims.append((ivn, coef, e.const))
+        else:
+            dims.append((None, 0, e.const))
+    return dims
+
+
+def _extract_nests(p: Program) -> tuple[list[_Nest], list[str]]:
+    hard: list[str] = []
+    nests: list[_Nest] = []
+    for item in p.body:
+        if not isinstance(item, Loop):
+            hard.append("top-level op outside any loop nest")
+            continue
+        ivs, trips, cur = [], [], item
+        ops = None
+        while True:
+            ivs.append(cur.ivname)
+            trips.append(cur.trip)
+            if cur.lb != 0:
+                hard.append(f"nest '{item.ivname}': non-zero lower bound")
+                break
+            inner = [x for x in cur.body if isinstance(x, Loop)]
+            plain = [x for x in cur.body if not isinstance(x, Loop)]
+            if inner and plain:
+                hard.append(f"nest '{item.ivname}': imperfect nest (ops mixed "
+                            "with an inner loop)")
+                break
+            if len(inner) > 1:
+                hard.append(f"nest '{item.ivname}': multiple inner loops at "
+                            "one level")
+                break
+            if inner:
+                if len(ivs) >= 2:
+                    hard.append(f"nest '{item.ivname}': deeper than 2 loops")
+                    break
+                cur = inner[0]
+                continue
+            ops = plain
+            break
+        if ops is None:
+            continue
+        nest = _Nest(loop=item, ivs=ivs, trips=trips, ops=ops)
+        ok = True
+        for op in ops:
+            if isinstance(op, LoadOp):
+                dims = _classify_access(set(ivs), op.index,
+                                        p.arrays[op.array].shape, "load",
+                                        item.ivname, hard)
+                if dims is None:
+                    ok = False
+                    break
+                nest.loads.append((op, _Access(op.array, dims)))
+            elif isinstance(op, StoreOp):
+                dims = _classify_access(set(ivs), op.index,
+                                        p.arrays[op.array].shape, "store",
+                                        item.ivname, hard)
+                if dims is None:
+                    ok = False
+                    break
+                used = [d[0] for d in dims if d[0] is not None]
+                if sorted(used) != sorted(ivs) or len(used) != len(dims):
+                    hard.append(f"nest '{item.ivname}': store to "
+                                f"'{op.array}' must use every nest iv in "
+                                "exactly one dim (no constant dims)")
+                    ok = False
+                    break
+                nest.stores.append((op, _Access(op.array, dims)))
+            elif isinstance(op, ArithOp):
+                if op.fn not in _ARITH_FMT:
+                    hard.append(f"nest '{item.ivname}': unsupported op "
+                                f"'{op.fn}'")
+                    ok = False
+                    break
+            elif not isinstance(op, ConstOp):
+                hard.append(f"nest '{item.ivname}': unsupported IR node "
+                            f"{type(op).__name__}")
+                ok = False
+                break
+        if not ok:
+            continue
+        rd = {a.array for _, a in nest.loads}
+        wr = {a.array for _, a in nest.stores}
+        for arr in sorted(rd & wr):
+            hard.append(f"nest '{item.ivname}': reduction — reads '{arr}' "
+                        "it also writes (carried accumulation has no "
+                        "streaming lowering)")
+            ok = False
+        if ok:
+            nests.append(nest)
+    writers: dict[str, str] = {}
+    for nest in nests:
+        for _, acc in nest.stores:
+            prev = writers.get(acc.array)
+            if prev is not None and prev != nest.loop.ivname:
+                hard.append(f"array '{acc.array}' written by two nests "
+                            f"('{prev}', '{nest.loop.ivname}')")
+            writers[acc.array] = nest.loop.ivname
+    return nests, hard
+
+
+# ---------------------------------------------------------------------------
+# Mode A: the streamed (grid + window) plan
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class _StagePlan:
+    nest: _Nest
+    out: str                    # produced array
+    r0: int                     # store row/col offsets into the array
+    c0: int
+    win_a: int = 0              # domain rows [a*t+b, a*t+b+sz) per grid step
+    win_b: int = 0
+    win_sz: int = 0
+
+
+@dataclass
+class _StreamPlan:
+    stages: list[_StagePlan]
+    sink: _StagePlan
+    block_rows: int
+    grid: int                   # T
+    inputs: list[str]           # arrays read from refs (not stage-produced)
+    pad_rows: dict[str, int]    # input array -> trailing edge-pad rows
+    halo: dict[str, int]        # produced array -> window overhang (sz - a)
+
+
+def _plan_streamed(p: Program, nests: list[_Nest],
+                   block_rows: int) -> tuple[Optional[_StreamPlan], list[str]]:
+    soft: list[str] = []
+    stages: list[_StagePlan] = []
+    for nest in nests:
+        tag = nest.loop.ivname
+        if len(nest.ivs) != 2:
+            soft.append(f"nest '{tag}': streamed mode needs depth-2 nests")
+            return None, soft
+        if len(nest.stores) != 1:
+            soft.append(f"nest '{tag}': streamed mode needs exactly one "
+                        f"store ({len(nest.stores)} found)")
+            return None, soft
+        _, acc = nest.stores[0]
+        (iv0, c0_, r_off), (iv1, c1_, c_off) = acc.dims
+        if (iv0, c0_) != (nest.ivs[0], 1) or (iv1, c1_) != (nest.ivs[1], 1):
+            soft.append(f"nest '{tag}': store to '{acc.array}' is strided or "
+                        "transposed")
+            return None, soft
+        stages.append(_StagePlan(nest=nest, out=acc.array, r0=r_off,
+                                 c0=c_off))
+    if not stages:
+        soft.append("no loop nests")
+        return None, soft
+    produced = {s.out: i for i, s in enumerate(stages)}
+    # loads: row dim must carry the outer iv; col dim the inner iv or const
+    for si, s in enumerate(stages):
+        tag = s.nest.loop.ivname
+        for _, acc in s.nest.loads:
+            if len(acc.dims) != 2:
+                soft.append(f"nest '{tag}': streamed mode needs 2-D loads "
+                            f"('{acc.array}' is {len(acc.dims)}-D)")
+                return None, soft
+            (riv, _, _), (civ, _, _) = acc.dims
+            if riv != s.nest.ivs[0] or civ not in (s.nest.ivs[1], None):
+                soft.append(f"nest '{tag}': load of '{acc.array}' is "
+                            "transposed or row-constant")
+                return None, soft
+            if acc.array in produced and produced[acc.array] >= si:
+                soft.append(f"nest '{tag}': reads '{acc.array}' before its "
+                            "producer runs (initial-value read)")
+                return None, soft
+    sinks = [s for s in stages
+             if not any(acc.array == s.out
+                        for t in stages for _, acc in t.nest.loads)]
+    if len(sinks) != 1:
+        soft.append(f"streamed mode needs a unique sink stage "
+                    f"({len(sinks)} found: {[s.out for s in sinks]})")
+        return None, soft
+    sink = sinks[0]
+    shape = p.arrays[sink.out].shape
+    if (sink.r0, sink.c0) != (0, 0) or tuple(sink.nest.trips) != shape:
+        soft.append(f"sink nest '{sink.nest.loop.ivname}' does not fully "
+                    f"cover '{sink.out}'")
+        return None, soft
+    # coverage: every stage-to-stage read stays inside the producer's
+    # written box (else the read would see initial values -> Mode B)
+    for s in stages:
+        for _, acc in s.nest.loads:
+            if acc.array not in produced:
+                continue
+            prod = stages[produced[acc.array]]
+            (riv, rc, rk), (civ, cc, ck) = acc.dims
+            rmax = rc * (s.nest.trips[0] - 1) + rk
+            cmax = (cc * (s.nest.trips[1] - 1) + ck) if civ else ck
+            if not (rk >= prod.r0 and ck >= prod.c0
+                    and rmax < prod.r0 + prod.nest.trips[0]
+                    and cmax < prod.c0 + prod.nest.trips[1]):
+                soft.append(f"nest '{s.nest.loop.ivname}': load of "
+                            f"'{acc.array}' reads outside the producer's "
+                            "written box")
+                return None, soft
+    # backward window propagation: sink computes [B*t, B*t+B)
+    rout = sink.nest.trips[0]
+    B = max(1, min(block_rows, rout))
+    sink.win_a, sink.win_b, sink.win_sz = B, 0, B
+    halo: dict[str, int] = {}
+    for s in reversed(stages):
+        if s is sink:
+            continue
+        reqs = []  # (consumer stage, row coef, row const)
+        for c in stages:
+            for _, acc in c.nest.loads:
+                if acc.array == s.out:
+                    reqs.append((c, acc.dims[0][1], acc.dims[0][2]))
+        # the unique-sink check already ran: a non-sink stage has consumers,
+        # and they are later stages whose windows are already resolved
+        assert reqs, s.out
+        rates = {rc * c.win_a for c, rc, _ in reqs}
+        if len(rates) > 1:
+            soft.append(f"consumers of '{s.out}' advance at incompatible "
+                        f"row rates {sorted(rates)}")
+            return None, soft
+        a = rates.pop()
+        lo = min(rc * c.win_b + rk for c, rc, rk in reqs) - s.r0
+        hi = max(rc * (c.win_b + c.win_sz - 1) + rk
+                 for c, rc, rk in reqs) - s.r0
+        if lo < 0:
+            soft.append(f"window of '{s.out}' starts before its domain "
+                        f"(offset {lo})")
+            return None, soft
+        s.win_a, s.win_b, s.win_sz = a, lo, hi - lo + 1
+        halo[s.out] = s.win_sz - s.win_a
+    T = -(-rout // B)
+    # trailing edge-padding so the last (possibly partial) tile's input
+    # reads stay in bounds; padded rows only feed output rows >= Rout,
+    # which the host wrapper trims
+    pad_rows: dict[str, int] = {}
+    inputs: list[str] = []
+    for s in stages:
+        for _, acc in s.nest.loads:
+            if acc.array in produced:
+                continue
+            if acc.array not in inputs:
+                inputs.append(acc.array)
+            rc, rk = acc.dims[0][1], acc.dims[0][2]
+            need = rc * (s.win_a * (T - 1) + s.win_b + s.win_sz - 1) + rk
+            over = need - (p.arrays[acc.array].shape[0] - 1)
+            if over > 0:
+                pad_rows[acc.array] = max(pad_rows.get(acc.array, 0), over)
+    return _StreamPlan(stages=stages, sink=sink, block_rows=B, grid=T,
+                       inputs=inputs, pad_rows=pad_rows, halo=halo), soft
+
+
+# ---------------------------------------------------------------------------
+# Source emission helpers
+# ---------------------------------------------------------------------------
+
+
+def _lit(v: float) -> str:
+    return repr(float(v))
+
+
+def _affine_t(coef: int, const: int) -> str:
+    if coef == 0:
+        return str(const)
+    if const == 0:
+        return f"{coef} * t"
+    return f"{coef} * t + {const}"
+
+
+def _sl(lo: int, hi: int, step: int) -> str:
+    s = f"{lo}:{hi}"
+    return s + (f":{step}" if step > 1 else "")
+
+
+def _emit_streamed(p: Program, plan: _StreamPlan, buffering: str,
+                   dtype: str) -> tuple[str, dict]:
+    B, T = plan.block_rows, plan.grid
+    sink = plan.sink
+    cout = p.arrays[sink.out].shape[1]
+    rout = sink.nest.trips[0]
+    produced = {s.out: s for s in plan.stages}
+    refs = [f"r_{_ident(a)}" for a in plan.inputs]
+
+    body: list[str] = []
+    loadcache: dict[tuple, str] = {}
+    final = None
+    for s in plan.stages:
+        tag = s.nest.loop.ivname
+        csz = s.nest.trips[1]
+        body.append(f"# stage {tag}: '{s.out}' domain rows "
+                    f"[{s.win_a}*t+{s.win_b}, +{s.win_sz})")
+        names: dict[str, str] = {}
+        for op in s.nest.ops:
+            if isinstance(op, ConstOp):
+                names[op.result] = _lit(op.value)
+            elif isinstance(op, LoadOp):
+                acc = next(a for o, a in s.nest.loads if o is op)
+                (_, rc, rk), (civ, cc, ck) = acc.dims
+                rowsel = f"::{rc}" if rc > 1 else ":"
+                if acc.array in produced:
+                    prod = produced[acc.array]
+                    rel = rc * s.win_b + rk - prod.r0 - prod.win_b
+                    rsel = _sl(rel, rel + rc * (s.win_sz - 1) + 1, rc)
+                    if civ is None:
+                        csel = _sl(ck - prod.c0, ck - prod.c0 + 1, 1)
+                    else:
+                        csel = _sl(ck - prod.c0,
+                                   ck - prod.c0 + cc * (csz - 1) + 1, cc)
+                    expr = f"w_{_ident(acc.array)}[{rsel}, {csel}]"
+                else:
+                    start = _affine_t(rc * s.win_a, rc * s.win_b + rk)
+                    span = rc * (s.win_sz - 1) + 1
+                    key = (acc.array, start, span)
+                    if key not in loadcache:
+                        ld = f"ld_{_ident(acc.array)}{len(loadcache)}"
+                        body.append(
+                            f"{ld} = pl.load(r_{_ident(acc.array)}, "
+                            f"(pl.dslice({start}, {span}), slice(None)))")
+                        loadcache[key] = ld
+                    if civ is None:
+                        csel = _sl(ck, ck + 1, 1)
+                    else:
+                        csel = _sl(ck, ck + cc * (csz - 1) + 1, cc)
+                    expr = f"{loadcache[key]}[{rowsel}, {csel}]"
+                names[op.result] = _vname(op.result)
+                body.append(f"{names[op.result]} = {expr}")
+            elif isinstance(op, ArithOp):
+                names[op.result] = _vname(op.result)
+                body.append(f"{names[op.result]} = " + _ARITH_FMT[op.fn]
+                            .format(*(names[a] for a in op.args)))
+            elif isinstance(op, StoreOp):
+                val = names[op.value]
+                if s is sink:
+                    final = val
+                else:
+                    body.append(f"w_{_ident(s.out)} = jnp.broadcast_to("
+                                f"{val}, ({s.win_sz}, {csz}))")
+    assert final is not None
+    store_val = f"jnp.broadcast_to({final}, ({B}, {cout}))"
+
+    lines = [
+        '"""Generated by repro.core.codegen — do not edit."""',
+        "import jax",
+        "import jax.numpy as jnp",
+        "from jax.experimental import pallas as pl",
+        "",
+        f"DTYPE = jnp.dtype('{dtype}')",
+        "",
+        "",
+        "def _kernel(" + ", ".join(refs + ["o_ref"]) + "):",
+    ]
+    if buffering == "double":
+        lines.append("    t = pl.program_id(0)")
+        lines += ["    " + b for b in body]
+        lines.append(f"    o_ref[...] = {store_val}")
+    else:
+        lines.append("    def _tile(t, carry):")
+        lines += ["        " + b for b in body]
+        lines.append(f"        pl.store(o_ref, (pl.dslice({B} * t, {B}), "
+                     f"slice(None)), {store_val})")
+        lines.append("        return carry")
+        lines.append(f"    jax.lax.fori_loop(0, {T}, _tile, 0)")
+    lines += ["", "",
+              "def run(arrays, interpret=None):",
+              "    if interpret is None:",
+              "        interpret = jax.default_backend() != 'tpu'"]
+    args = []
+    specs = []
+    for a in plan.inputs:
+        v = f"x_{_ident(a)}"
+        lines.append(f"    {v} = jnp.asarray(arrays['{a}'], DTYPE)")
+        pad = plan.pad_rows.get(a, 0)
+        h, w = p.arrays[a].shape
+        if pad:
+            lines.append(f"    {v} = jnp.pad({v}, ((0, {pad}), (0, 0)), "
+                         "mode='edge')")
+        args.append(v)
+        specs.append(f"pl.BlockSpec(({h + pad}, {w}), lambda t: (0, 0))")
+    lines.append("    out = pl.pallas_call(")
+    lines.append("        _kernel,")
+    if buffering == "double":
+        lines.append(f"        grid=({T},),")
+        lines.append("        in_specs=[" + ", ".join(specs) + "],")
+        lines.append(f"        out_specs=pl.BlockSpec(({B}, {cout}), "
+                     "lambda t: (t, 0)),")
+    lines.append(f"        out_shape=jax.ShapeDtypeStruct(({T * B}, {cout}), "
+                 "DTYPE),")
+    lines.append("        interpret=interpret,")
+    lines.append("    )(" + ", ".join(args) + ")")
+    trim = f"[:{rout}]" if T * B != rout else ""
+    lines.append(f"    return {{'{sink.out}': out{trim}}}")
+    meta = {"mode": "streamed", "grid": (T,), "block_rows": B,
+            "halo": dict(plan.halo), "outputs": (sink.out,),
+            "vmem_window_elems": {s.out: s.win_sz * s.nest.trips[1]
+                                  for s in plan.stages if s is not sink}}
+    return "\n".join(lines) + "\n", meta
+
+
+# Strided stores can't use `.at[::step].set` inside a Pallas kernel (the
+# scatter lowering captures index constants, which pallas_call rejects), so
+# the generated module spreads the value with repeat/pad and selects the
+# strided positions with an iota mask — all Pallas-legal primitives.
+_STRIDED_SET_HELPER = '''
+
+def _strided_set(dst, val, starts, steps):
+    sp = val
+    for ax, st in enumerate(steps):
+        if st > 1:
+            sp = jnp.repeat(sp, st, axis=ax)
+    sp = sp[tuple(slice(0, dst.shape[a] - starts[a]) for a in range(sp.ndim))]
+    sp = jnp.pad(sp, tuple(
+        (starts[a], dst.shape[a] - starts[a] - sp.shape[a])
+        for a in range(sp.ndim)))
+    mask = None
+    for ax, (s0, st, n) in enumerate(zip(starts, steps, val.shape)):
+        i = jax.lax.broadcasted_iota(jnp.int32, dst.shape, ax)
+        m = (i >= s0) & (i < s0 + st * (n - 1) + 1)
+        if st > 1:
+            m = m & ((i - s0) % st == 0)
+        mask = m if mask is None else (mask & m)
+    return jnp.where(mask, sp, dst)
+'''
+
+
+def _emit_whole(p: Program, nests: list[_Nest], dtype: str) -> tuple[str, dict]:
+    stored = []
+    for nest in nests:
+        for _, acc in nest.stores:
+            if acc.array not in stored:
+                stored.append(acc.array)
+    order = list(p.arrays)
+    refs = [f"r_{_ident(a)}" for a in order]
+    outs = [f"o_{_ident(a)}" for a in stored]
+
+    body: list[str] = []
+    inited: set[str] = set()
+
+    def init(a: str):
+        if a not in inited:
+            body.append(f"v_{_ident(a)} = r_{_ident(a)}[...]")
+            inited.add(a)
+
+    for nest in nests:
+        ivpos = {ivn: k for k, ivn in enumerate(nest.ivs)}
+        trips = nest.trips
+        body.append(f"# nest {nest.loop.ivname}: domain {tuple(trips)}")
+        names: dict[str, str] = {}
+        for op in nest.ops:
+            if isinstance(op, ConstOp):
+                names[op.result] = _lit(op.value)
+            elif isinstance(op, LoadOp):
+                acc = next(a for o, a in nest.loads if o is op)
+                init(acc.array)
+                sels, axis_ivs = [], []
+                for ivn, coef, const in acc.dims:
+                    if ivn is None:
+                        sels.append(_sl(const, const + 1, 1))
+                        axis_ivs.append(None)
+                    else:
+                        n = trips[ivpos[ivn]]
+                        sels.append(_sl(const, const + coef * (n - 1) + 1,
+                                        coef))
+                        axis_ivs.append(ivn)
+                v = f"v_{_ident(acc.array)}"
+                if len(acc.dims) == 1:
+                    (ivn, coef, const), = acc.dims
+                    if ivn is None:
+                        expr = f"{v}[{const}]"
+                    else:
+                        expr = f"{v}[{sels[0]}]"
+                        if len(nest.ivs) == 2 and ivpos[ivn] == 0:
+                            expr += "[:, None]"
+                elif all(x is None for x in axis_ivs):
+                    expr = f"{v}[{acc.dims[0][2]}, {acc.dims[1][2]}]"
+                elif len(nest.ivs) == 1:
+                    # depth-1 nest reading a 2-D array: collapse the
+                    # constant axis so the value is 1-D over the nest iv
+                    if axis_ivs[0] is None:
+                        expr = f"{v}[{acc.dims[0][2]}, {sels[1]}]"
+                    else:
+                        expr = f"{v}[{sels[0]}, {acc.dims[1][2]}]"
+                else:
+                    expr = f"{v}[{sels[0]}, {sels[1]}]"
+                    # align value axes with the (outer, inner) target:
+                    # transpose when an axis varies over the wrong iv
+                    if any(ivn is not None and ivpos[ivn] != k
+                           for k, ivn in enumerate(axis_ivs)):
+                        expr += ".T"
+                names[op.result] = _vname(op.result)
+                body.append(f"{names[op.result]} = {expr}")
+            elif isinstance(op, ArithOp):
+                names[op.result] = _vname(op.result)
+                body.append(f"{names[op.result]} = " + _ARITH_FMT[op.fn]
+                            .format(*(names[a] for a in op.args)))
+            elif isinstance(op, StoreOp):
+                acc = next(a for o, a in nest.stores if o is op)
+                init(acc.array)
+                sels, starts, steps, exts = [], [], [], []
+                for ivn, coef, const in acc.dims:
+                    n = trips[ivpos[ivn]]
+                    sels.append(_sl(const, const + coef * (n - 1) + 1, coef))
+                    starts.append(const)
+                    steps.append(coef)
+                    exts.append(n)
+                val = names[op.value]
+                if (len(acc.dims) == 2
+                        and ivpos[acc.dims[0][0]] == 1):  # transposed store
+                    # exts are already in destination-dim order, matching
+                    # the transposed value
+                    val = f"jnp.asarray({val}).T"
+                v = f"v_{_ident(acc.array)}"
+                shape = p.arrays[acc.array].shape
+                full = (all(st == 1 for st in steps)
+                        and all(s0 == 0 for s0 in starts)
+                        and tuple(exts) == shape)
+                if full:
+                    # a full-array `.at[...].set` hits a scatter path whose
+                    # lowering captures constants (rejected by pallas_call);
+                    # a full store is just a broadcast reassignment
+                    body.append(f"{v} = jnp.broadcast_to({val}, {shape!r})")
+                elif all(st == 1 for st in steps):
+                    body.append(f"{v} = {v}.at[" + ", ".join(sels) +
+                                f"].set({val})")
+                else:
+                    exts_t = ("(" + ", ".join(map(str, exts))
+                              + ("," if len(exts) == 1 else "") + ")")
+                    body.append(
+                        f"{v} = _strided_set({v}, jnp.broadcast_to({val}, "
+                        f"{exts_t}), {tuple(starts)!r}, {tuple(steps)!r})")
+    for a in stored:
+        init(a)  # a store-only nest filtered out earlier can't happen,
+        body.append(f"o_{_ident(a)}[...] = v_{_ident(a)}")
+
+    lines = [
+        '"""Generated by repro.core.codegen — do not edit."""',
+        "import jax",
+        "import jax.numpy as jnp",
+        "from jax.experimental import pallas as pl",
+        "",
+        f"DTYPE = jnp.dtype('{dtype}')",
+    ]
+    if any("_strided_set(" in b for b in body):
+        lines.append(_STRIDED_SET_HELPER.rstrip("\n"))
+    lines += [
+        "",
+        "",
+        "def _kernel(" + ", ".join(refs + outs) + "):",
+    ]
+    lines += ["    " + b for b in body]
+    lines += ["", "",
+              "def run(arrays, interpret=None):",
+              "    if interpret is None:",
+              "        interpret = jax.default_backend() != 'tpu'"]
+    for a in order:
+        lines.append(f"    x_{_ident(a)} = jnp.asarray(arrays['{a}'], DTYPE)")
+    shapes = ", ".join(
+        f"jax.ShapeDtypeStruct({p.arrays[a].shape!r}, DTYPE)" for a in stored)
+    lines.append("    outs = pl.pallas_call(")
+    lines.append("        _kernel,")
+    lines.append(f"        out_shape=[{shapes}],")
+    lines.append("        interpret=interpret,")
+    lines.append("    )(" + ", ".join(f"x_{_ident(a)}" for a in order) + ")")
+    lines.append("    return {" + ", ".join(
+        f"'{a}': outs[{i}]" for i, a in enumerate(stored)) + "}")
+    meta = {"mode": "whole", "grid": (), "block_rows": None, "halo": {},
+            "outputs": tuple(stored), "vmem_window_elems": {}}
+    return "\n".join(lines) + "\n", meta
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class PallasKernel:
+    """An executable lowering of a Program.
+
+    ``fn(arrays, interpret=None) -> dict`` maps input arrays (by name, the
+    same dict ``sim.make_inputs`` produces) to the produced output arrays.
+    ``source`` is the emitted kernel module text — the debuggable artifact.
+    """
+
+    program_name: str
+    mode: str                       # "streamed" | "whole"
+    buffering: str                  # "double" | "single"
+    source: str
+    fn: Callable
+    outputs: tuple
+    grid: tuple
+    block_rows: Optional[int]
+    halo: dict = field(default_factory=dict)
+    vmem_window_elems: dict = field(default_factory=dict)
+    soft_reasons: list = field(default_factory=list)
+    modeled_latency: Optional[int] = None
+    point_desc: Optional[str] = None
+    fusion_shifts: list = field(default_factory=list)
+
+    def __call__(self, arrays, interpret=None):
+        return self.fn(arrays, interpret=interpret)
+
+
+def lower_program(p: Program, *, block_rows: Optional[int] = None,
+                  buffering: str = "double",
+                  dtype: str = "float32") -> PallasKernel:
+    """Lower ``p`` to a Pallas kernel (streamed if the chain contract holds,
+    whole-array otherwise); raises :class:`UnlowerableProgram` when the
+    program is outside both contracts."""
+    if buffering not in ("double", "single"):
+        raise ValueError(f"buffering must be 'double' or 'single', "
+                         f"got {buffering!r}")
+    nests, hard = _extract_nests(p)
+    if hard:
+        raise UnlowerableProgram(p.name, hard)
+    if not nests:
+        raise UnlowerableProgram(p.name, ["program has no loop nests"])
+    plan, soft = _plan_streamed(p, nests, block_rows or DEFAULT_BLOCK_ROWS)
+    if plan is not None:
+        src, meta = _emit_streamed(p, plan, buffering, dtype)
+    else:
+        src, meta = _emit_whole(p, nests, dtype)
+    ns: dict = {}
+    exec(compile(src, f"<codegen:{p.name}>", "exec"), ns)
+    return PallasKernel(program_name=p.name, mode=meta["mode"],
+                        buffering=buffering if meta["mode"] == "streamed"
+                        else "whole", source=src, fn=ns["run"],
+                        outputs=meta["outputs"], grid=meta["grid"],
+                        block_rows=meta["block_rows"], halo=meta["halo"],
+                        vmem_window_elems=meta["vmem_window_elems"],
+                        soft_reasons=soft)
+
+
+def _point_block_rows(point) -> Optional[int]:
+    """block_rows from a design point: the tile pass marks the outer strip
+    loop with ``tile_block``; fall back to the LoopTile pass config."""
+    blocks = [l.tile_block for l in point.program.loops()
+              if getattr(l, "tile_block", None)]
+    if blocks:
+        return max(blocks)
+    from .transforms import LoopTile
+    sizes = []
+    for ps in point.passes:
+        if isinstance(ps, LoopTile):
+            sz = ps.seq if ps.seq is not None else tuple(ps.sizes.values())
+            sizes.extend(sz)
+    return max(sizes) if sizes else None
+
+
+def emit_pallas(result, point=None, *, buffering: str = "double",
+                block_rows: Optional[int] = None,
+                dtype: str = "float32") -> PallasKernel:
+    """Lower a ``CompileResult`` design point (default: ``result.best``) to
+    an executable Pallas kernel.  The tile pass supplies ``block_rows``, the
+    fusion log rides along as ``kernel.fusion_shifts`` (the streamed
+    window's ``halo`` generalizes the fusion row shift).  Unlowerable
+    programs raise :class:`UnlowerableProgram` *and* record a
+    ``codegen-unlowerable`` diagnostic on the result."""
+    point = point if point is not None else result.best
+    if block_rows is None:
+        block_rows = _point_block_rows(point)
+    try:
+        k = lower_program(result.program, block_rows=block_rows,
+                          buffering=buffering, dtype=dtype)
+    except UnlowerableProgram as e:
+        result.diagnostics.append({
+            "kind": "codegen-unlowerable", "program": e.program_name,
+            "reasons": list(e.reasons)})
+        raise
+    k.modeled_latency = point.latency
+    k.point_desc = point.desc
+    k.fusion_shifts = [dict(x) for x in
+                       getattr(point.program, "_fusion_log", [])]
+    return k

@@ -320,9 +320,16 @@ def _top_groups(p: Program) -> list[list]:
     return [groups[k] for k in order]
 
 
-def tile_window_elems(p: Program) -> dict[str, int]:
+def tile_window_elems(p: Program, *, buffers: int = 1) -> dict[str, int]:
     """array -> streamed-window element count for nest-local intermediates
     of explicitly tiled nests (DESIGN.md §6).
+
+    ``buffers`` multiplies each window for multi-buffered (ping-pong)
+    codegen footprints: ``codegen.lower_program(buffering="double")``
+    overlaps tile ``t+1``'s refill with tile ``t``'s compute, which costs
+    ``buffers=2`` copies of every window.  The default (1) is the cost
+    model the §6 golden frontiers are pinned against — resource-aware DSE
+    keeps using it; only codegen footprint reporting passes ``buffers=2``.
 
     An intermediate array (``is_arg=False``) whose every access lives in a
     single top-level group whose core nest was strip-mined by ``LoopTile``
@@ -386,7 +393,7 @@ def tile_window_elems(p: Program) -> dict[str, int]:
             extent = max(his) - min(los) + 1
             window *= max(1, min(extent, arr.shape[d]))
         if ok and window < arr.num_elems():
-            out[name] = window
+            out[name] = window * max(1, int(buffers))
     return out
 
 

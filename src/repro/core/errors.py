@@ -34,3 +34,22 @@ class WorkerFault(CompileError):
 
 class CacheFault(CompileError):
     """The persistent cache is unusable beyond per-entry repair."""
+
+
+class UnlowerableProgram(CompileError):
+    """The program has no Pallas lowering (``codegen.emit_pallas``).
+
+    Raised with the full list of structural ``reasons`` — imperfect or
+    too-deep nests, reductions (a nest reading an array it writes), multi-
+    writer arrays, non-affine-separable accesses — instead of an opaque
+    downstream failure.  ``emit_pallas`` additionally records the rejection
+    in ``CompileResult.diagnostics`` (kind ``codegen-unlowerable``) so the
+    DSE trace shows which design points cannot become kernels.
+    """
+
+    def __init__(self, program_name: str, reasons):
+        self.program_name = str(program_name)
+        self.reasons = [str(r) for r in reasons]
+        super().__init__(
+            f"program '{self.program_name}' has no Pallas lowering: "
+            + "; ".join(self.reasons))

@@ -3,10 +3,12 @@
 ``interpret`` defaults to True on CPU (this container) and False on TPU, so
 the same call sites work in both environments.
 
-``stencil_pipeline`` (and its configuration helpers ``stencil_dse_config``
-and the fallback ``ilp_halo_rows``) are re-exported from
-``repro.kernels.stencil_pipeline`` — that module owns the single
-implementation; this one used to carry a diverging duplicate wrapper.
+``stencil_pipeline`` (and its configuration helpers — the deprecated
+``stencil_dse_config`` wrapper and the fallback ``ilp_halo_rows``) are
+re-exported from ``repro.kernels.stencil_pipeline`` — that module owns the
+single implementation; this one used to carry a diverging duplicate
+wrapper.  The blessed configuration path is now
+``hls.compile(...).emit_pallas()`` (DESIGN.md §10).
 """
 from __future__ import annotations
 

@@ -9,13 +9,17 @@ same slack *sizes the VMEM line buffer*: each grid step loads a row tile plus
 in VMEM, and immediately consumes it (conv-y) — the intermediate array never
 touches HBM.
 
-The block/halo configuration comes from a DSE sweep (``stencil_dse_config``):
-``hls.compile`` shift-and-peel-fuses the mismatched-bounds blur chain
-(``programs.blur_chain``) and the knee point of the resulting latency x BRAM
-Pareto frontier supplies both values — the fusion's row shift IS the halo,
-the knee's tiling of the fused row loop sets ``block_rows``.  The older
-fixed probe (``ilp_halo_rows``) is kept only as the fallback when the sweep
-finds no shifted fusion.
+Since the codegen backend landed (DESIGN.md §10) this hand-written kernel is
+the *golden reference*: ``repro.core.codegen.lower_program`` generates the
+same kernel from the ``programs.blur_chain`` IR (the golden test asserts
+bit-exact agreement), and the block/halo configuration is read off the
+generated kernel — ``hls.compile`` shift-and-peel-fuses the mismatched-bounds
+chain, the knee point of the latency x BRAM Pareto frontier is lowered with
+``CompileResult.emit_pallas()``, and the kernel's ``block_rows`` / ``halo``
+supply both values (the fusion's row shift IS the halo).  The older fixed
+probe (``ilp_halo_rows``) is kept only as the fallback when the sweep finds
+no shifted fusion.  ``stencil_dse_config`` remains as a deprecated wrapper
+(DESIGN.md §6 MIGRATION).
 
 This module owns the single implementation; ``repro.kernels.ops`` re-exports
 it (they used to diverge on the ``interpret`` default).
@@ -23,6 +27,7 @@ it (they used to diverge on the ``interpret`` default).
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -77,7 +82,7 @@ def stencil_pipeline(img, wx, wy, *, block_rows=None, halo=None,
     defaults to True off-TPU."""
     interpret = default_interpret() if interpret is None else interpret
     if block_rows is None or halo is None:
-        dse_rows, dse_halo = stencil_dse_config()
+        dse_rows, dse_halo = _stencil_codegen_config()
         block_rows = dse_rows if block_rows is None else block_rows
         halo = dse_halo if halo is None else halo
     H, _ = img.shape
@@ -90,8 +95,9 @@ def stencil_pipeline(img, wx, wy, *, block_rows=None, halo=None,
 
 @functools.lru_cache()
 def ilp_halo_rows(taps: int = 3) -> int:
-    """Fallback fixed probe (demoted: ``stencil_dse_config`` is the primary
-    source): derive the line-buffer halo from the paper's memory-dependence
+    """Fallback fixed probe (demoted: the ``emit_pallas`` sweep in
+    ``_stencil_codegen_config`` is the primary source): derive the
+    line-buffer halo from the paper's memory-dependence
     ILP by scheduling a two-nest conv chain and converting the
     producer->consumer slack into rows (slack = -(halo rows) * II_row).
 
@@ -142,18 +148,18 @@ def ilp_halo_rows(taps: int = 3) -> int:
 
 
 # (taps, n) -> "dse" or "fallback(<reason>)": which path produced the config
-# returned by stencil_dse_config — tests assert the DSE sweep actually ran,
-# so a silently broken sweep cannot hide behind the fallback's equal values.
+# returned by _stencil_codegen_config — tests assert the DSE sweep actually
+# ran, so a silently broken sweep cannot hide behind the fallback's values.
 _CONFIG_SOURCE: dict[tuple[int, int], str] = {}
 
 
 def _stencil_dse_sweep(taps: int, n: int) -> tuple[int, int]:
-    """Run the hls.compile Pareto sweep and read the config off the
-    frontier's knee point; raises RuntimeError when no frontier point
-    shift-fused bx."""
+    """Run the hls.compile Pareto sweep, lower the knee point with
+    ``emit_pallas``, and read (block_rows, halo) off the generated kernel;
+    raises RuntimeError when no frontier point shift-fused bx."""
     from repro.core import hls
+    from repro.core.errors import UnlowerableProgram
     from repro.core.programs import blur_chain
-    from repro.core.transforms import LoopTile
 
     # bram storage so the tile-window footprint term differentiates block
     # sizes; the partition move is excluded — full partitioning is a knob
@@ -175,66 +181,63 @@ def _stencil_dse_sweep(taps: int, n: int) -> tuple[int, int]:
     if not fused:
         raise RuntimeError("DSE sweep found no shifted fusion of bx on the "
                            "frontier")
-    # knee of the latency x BRAM trade-off among the fused frontier points:
-    # the fusion's row shift IS the line-buffer halo, a tiling of the fused
-    # row loop sets the row-block size
+    # knee of the latency x BRAM trade-off among the fused frontier points,
+    # lowered to the generated kernel: its window analysis turns the fusion's
+    # row shift into the line-buffer halo, and the knee's tiling of the
+    # fused row loop into the Pallas grid's row-block size
     knee = r.knee("latency", "bram", among=fused)
-    halo = row_shift(knee)
-    block_rows = 8
-    for ps in knee.passes:
-        if isinstance(ps, LoopTile):
-            sizes = ps.seq if ps.seq is not None else tuple(ps.sizes.values())
-            if sizes:
-                block_rows = max(sizes)
-    return block_rows, halo
+    try:
+        kern = r.emit_pallas(knee)
+    except UnlowerableProgram as e:
+        raise RuntimeError(f"knee point unlowerable: {e}") from e
+    return kern.block_rows, kern.halo["bx"]
 
 
 @functools.lru_cache()
-def stencil_dse_config(taps: int = 3, n: int = 8) -> tuple[int, int]:
-    """(block_rows, halo) for ``stencil_pipeline``, produced by a DSE sweep.
+def _stencil_codegen_config(taps: int = 3, n: int = 8) -> tuple[int, int]:
+    """(block_rows, halo) for ``stencil_pipeline``, read off the generated
+    kernel of the DSE knee point.
 
     ``hls.compile`` explores transform pipelines over the mismatched-bounds
-    blur chain and returns the Pareto frontier over (latency, BRAM, ...);
-    the knee point of the latency x BRAM curve among the candidates that
-    shift-and-peel fused the intermediate ``bx`` supplies the config: the
-    fusion's row shift (recorded in the program's ``_fusion_log``) is
-    exactly the number of producer rows the consumer must trail by — the
-    line-buffer halo — and that point's tiling of the fused row loop sets
-    the row-block size (the tile-window footprint term is what makes block
-    sizes trade BRAM for control, so the knee picks ``block_rows`` for
-    real).  Falls back to the fixed ``ilp_halo_rows`` probe if the sweep
-    yields no shifted fusion; ``stencil_config_source`` reports which path
-    produced the values.
+    blur chain; the knee of the latency x BRAM curve among the candidates
+    that shift-and-peel fused the intermediate ``bx`` is lowered with
+    ``CompileResult.emit_pallas()`` and the kernel reports its own config:
+    ``PallasKernel.halo["bx"]`` is the fusion's row shift (the number of
+    producer rows the consumer trails by — the line-buffer halo) and
+    ``PallasKernel.block_rows`` the knee's tiling of the fused row loop.
+    Falls back to the fixed ``ilp_halo_rows`` probe if the sweep yields no
+    shifted fusion; ``stencil_config_source`` reports which path produced
+    the values.
 
-    The result persists in the compile cache (``repro.core.cache``), so a
-    serving process pays the sweep once per machine, not once per process —
-    the ``lru_cache`` on top only memoizes the in-process lookups.  Entries
-    carry the scheduler salt: a compiler change invalidates them and the
-    sweep reruns."""
-    from repro.core.cache import get_store, string_key
-
-    store = get_store()
-    key = store and string_key("stencil_dse_config", str(taps), str(n))
-    if store is not None:
-        entry = store.get(key)
-        if (isinstance(entry, dict)
-                and {"block_rows", "halo", "source"} <= set(entry)):
-            _CONFIG_SOURCE[(taps, n)] = entry["source"]
-            return int(entry["block_rows"]), int(entry["halo"])
+    Persistence rides the PR 6 compile cache: ``hls.compile`` stores the
+    whole frontier content-addressed (``repro.core.cache``), so a serving
+    process pays the sweep once per machine and this function only replays
+    a cache hit — no private side entry needed.  The ``lru_cache`` on top
+    memoizes the in-process lookups; cache entries carry the scheduler
+    salt, so a compiler change invalidates them and the sweep reruns."""
     try:
         cfg = _stencil_dse_sweep(taps, n)
         _CONFIG_SOURCE[(taps, n)] = "dse"
     except RuntimeError as e:  # demoted fixed-probe fallback
         _CONFIG_SOURCE[(taps, n)] = f"fallback({e})"
         cfg = 8, ilp_halo_rows(taps)
-    if store is not None:
-        store.put(key, {"block_rows": int(cfg[0]), "halo": int(cfg[1]),
-                        "source": _CONFIG_SOURCE[(taps, n)]})
     return cfg
 
 
+def stencil_dse_config(taps: int = 3, n: int = 8) -> tuple[int, int]:
+    """Deprecated wrapper (DESIGN.md §6 MIGRATION): the blessed path is
+    ``hls.compile(blur_chain(...)).emit_pallas()`` — the generated kernel
+    carries ``block_rows``/``halo`` itself.  Old signature kept; delegates
+    to the same config the kernel defaults use."""
+    warnings.warn(
+        "stencil_dse_config is deprecated; use hls.compile(...)"
+        ".emit_pallas() and read PallasKernel.block_rows / .halo "
+        "(DESIGN.md §6 MIGRATION)", DeprecationWarning, stacklevel=2)
+    return _stencil_codegen_config(taps, n)
+
+
 def stencil_config_source(taps: int = 3, n: int = 8) -> str:
-    """'dse' when stencil_dse_config's values came from the explore()
+    """'dse' when the stencil config values came from the emit_pallas
     sweep, else 'fallback(<reason>)'."""
-    stencil_dse_config(taps, n)
+    _stencil_codegen_config(taps, n)
     return _CONFIG_SOURCE[(taps, n)]

@@ -130,10 +130,10 @@ def test_frontier_point_differs_by_tile_size():
     assert min(c.res["bram_bytes"] for c in tiled) < \
         min(c.res["bram_bytes"] for c in untiled)
     # the stencil kernel config reads its block_rows off this exact knob,
-    # via the knee point, with the old signature unchanged
-    from repro.kernels.stencil_pipeline import (stencil_config_source,
-                                                stencil_dse_config)
-    block_rows, halo = stencil_dse_config()
+    # via the knee point's generated kernel (emit_pallas)
+    from repro.kernels.stencil_pipeline import (_stencil_codegen_config,
+                                                stencil_config_source)
+    block_rows, halo = _stencil_codegen_config()
     assert stencil_config_source() == "dse"
     assert halo == 2
     assert block_rows in tile_sizes_of(r.knee("latency", "bram",

@@ -58,16 +58,20 @@ def test_stencil_pipeline_single_implementation():
 
 
 def test_stencil_config_from_dse_sweep():
-    """The kernel's block/halo config is produced by an explore() sweep over
-    the shift-and-peel-fused blur chain: the winning fusion's row shift is
-    the halo.  It must agree with the (demoted, fallback-only) fixed probe
-    for the 3-tap chain — and must actually have COME from the sweep, not
-    from the fallback quietly returning the same values."""
-    from repro.kernels.stencil_pipeline import stencil_config_source
-    block_rows, halo = ops.stencil_dse_config()
+    """The kernel's block/halo config is read off the generated kernel of
+    the DSE knee point (emit_pallas): the winning fusion's row shift is the
+    halo.  It must agree with the (demoted, fallback-only) fixed probe for
+    the 3-tap chain — and must actually have COME from the sweep, not from
+    the fallback quietly returning the same values.  The old entry point
+    survives as a deprecated wrapper with the same values."""
+    from repro.kernels.stencil_pipeline import (_stencil_codegen_config,
+                                                stencil_config_source)
+    block_rows, halo = _stencil_codegen_config()
     assert stencil_config_source() == "dse"
     assert halo == 2 == ops.ilp_halo_rows(3)
     assert block_rows >= 1
+    with pytest.warns(DeprecationWarning, match="emit_pallas"):
+        assert ops.stencil_dse_config() == (block_rows, halo)
 
 
 def test_stencil_pipeline_dse_default_config():
