@@ -331,6 +331,88 @@ def codegen_table(res: dict) -> list[tuple]:
     return rows
 
 
+# Tracing-frontend snapshot (DESIGN.md §11), next to the other
+# BENCH_*.json files: frontier size + modeled speedup for the traced
+# kernels, proving real JAX functions flow through trace -> DSE end-to-end.
+TRACE_JSON = os.path.join(os.path.dirname(__file__), os.pardir,
+                          "BENCH_trace.json")
+
+
+def compute_trace(storage: str = "bram", force: bool = False) -> dict:
+    """Trace the bundled JAX kernels (wkv6 scan, separable conv block,
+    softmax attention) into Program IR, differentially validate each traced
+    program against its source function, and run the Pareto DSE on the
+    result.  Gates (raise):
+
+    * every traced program matches its source kernel under
+      ``sequential_exec`` at rtol=1e-12 (the differential contract),
+    * every traced program's frontier has >= 2 points (a single-point
+      frontier means the DSE found no latency/BRAM tradeoff on the traced
+      IR — the generalized nest contract regressed).
+
+    Results go to ``BENCH_trace.json``.  ``storage`` is recorded for cache
+    symmetry with the other suites; traced arrays always use the frontend's
+    dual-read BRAM preset."""
+    cache = {}
+    if os.path.exists(TRACE_JSON):
+        cache = json.load(open(TRACE_JSON))
+    if storage in cache and not force:
+        return cache[storage]
+
+    from repro.core import frontend, hls
+    from repro.core.autotune import measure_candidate
+    from repro.core.ir import nest_shape
+
+    traced = {
+        "wkv6": frontend.wkv6_program,
+        "conv_block": frontend.conv_block_program,
+        "attention": frontend.attention_program,
+    }
+    out = {}
+    for name, mk in traced.items():
+        t0 = time.time()
+        tp = mk()
+        err = tp.validate(seed=0, rtol=1e-12)  # raises past rtol
+        r = hls.compile(tp.program,
+                        objectives=(hls.minimize("latency"),
+                                    hls.minimize("bram")))
+        if len(r.frontier) < 2:
+            raise RuntimeError(
+                f"trace bench: '{name}' ({tp.program.name}) produced a "
+                f"single-point frontier — the traced IR stopped being "
+                f"DSE-searchable")
+        base = measure_candidate(tp.program, "baseline", [], verify=False)
+        best = min(c.latency for c in r.frontier)
+        out[name] = {
+            "program": tp.program.name,
+            "nest_kinds": list(nest_shape(tp.program).kinds),
+            "validate_max_rel_err": float(err),
+            "frontier_size": len(r.frontier),
+            "baseline_latency": int(base.latency),
+            "best_latency": int(best),
+            "modeled_speedup": round(base.latency / max(best, 1), 3),
+            "trace_seconds": round(time.time() - t0, 2),
+        }
+    cache[storage] = out
+    json.dump(cache, open(TRACE_JSON, "w"), indent=1)
+    return out
+
+
+def trace_table(res: dict) -> list[tuple]:
+    """Frontier size + modeled speedup per traced kernel."""
+    rows = []
+    for name, r in res.items():
+        rows.append((f"{name}.frontier_size", 0.0, r["frontier_size"]))
+        rows.append((f"{name}.modeled_speedup", 0.0,
+                     f"{r['modeled_speedup']} "
+                     f"(base={r['baseline_latency']},"
+                     f"best={r['best_latency']})"))
+        rows.append((f"{name}.validate", 0.0,
+                     f"max_rel_err={r['validate_max_rel_err']:.2e};"
+                     f"kinds={'+'.join(r['nest_kinds'])}"))
+    return rows
+
+
 def _hypervolume2d(points: list[tuple], ref: tuple) -> float:
     """Dominated 2D hypervolume (minimization) of ``points`` w.r.t. the
     reference corner ``ref``: the area between the non-dominated staircase

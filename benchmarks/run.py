@@ -11,7 +11,7 @@ import argparse
 
 #: every runnable suite — argparse rejects anything else
 SUITES = ("paper", "reg", "bram", "dse", "pareto", "dse-perf", "faults",
-          "fusion", "codegen", "pipeline", "kernels", "roofline")
+          "fusion", "codegen", "trace", "pipeline", "kernels", "roofline")
 
 
 def _emit(rows):
@@ -112,6 +112,16 @@ def main(argv=None) -> None:
         res = paper.compute_codegen(storage="bram", force=True)
         _emit([(f"codegen.bram.{n}", us, d)
                for n, us, d in paper.codegen_table(res)])
+
+    if only in (None, "trace"):
+        print("# === tracing frontend — traced JAX kernels (wkv6 scan, conv "
+              "block, attention): frontier size + modeled speedup "
+              "(DESIGN.md §11) ===")
+        # always re-run: this section IS the frontend acceptance gate (it
+        # raises when a traced program diverges from its source kernel or
+        # when a traced frontier collapses to a single point)
+        res = paper.compute_trace(storage="bram", force=True)
+        _emit([(f"trace.bram.{n}", us, d) for n, us, d in paper.trace_table(res)])
 
     if only in (None, "pipeline"):
         try:

@@ -14,8 +14,9 @@ from .ir import (AffExpr, ArrayDecl, ArithOp, ConstOp, LoadOp, Loop, Program,
                  ProgramBuilder, StoreOp, aff, iv, normalize)
 from .ilp import solve_ilp, solve_lp, brute_force_ilp
 from . import faults
-from .errors import (CacheFault, CompileError, ScheduleInfeasible,
-                     SolverTruncated, UnlowerableProgram, WorkerFault)
+from .errors import (CacheFault, CompileError, NestContractViolation,
+                     ScheduleInfeasible, SolverTruncated, UnlowerableProgram,
+                     UntraceableFunction, WorkerFault)
 from .codegen import PallasKernel, lower_program
 from .deps import DepAnalysis, DepEdge
 from .scheduler import Schedule, schedule, feasible, emit_hir
@@ -52,8 +53,11 @@ __all__ = [
     "hls", "CompileSpec", "CompileResult", "Target", "Objective",
     "Constraint", "constraint", "minimize", "SearchConfig", "DesignPoint",
     "faults", "CompileError", "ScheduleInfeasible", "SolverTruncated",
-    "WorkerFault", "CacheFault", "UnlowerableProgram",
+    "WorkerFault", "CacheFault", "UnlowerableProgram", "UntraceableFunction",
+    "NestContractViolation",
     "PallasKernel", "lower_program",
+    # tracing frontend, served lazily (importing it pulls in jax):
+    "trace", "TracedProgram",
     # deprecated shims, served lazily with a DeprecationWarning:
     "compile_program", "explore",
 ]
@@ -77,4 +81,9 @@ def __getattr__(name: str):
             DeprecationWarning, stacklevel=2)
         from . import api
         return getattr(api, name)
+    if name in ("trace", "TracedProgram"):
+        # lazy: the frontend imports jax, which the scheduler-only paths
+        # never need to pay for
+        from . import frontend
+        return getattr(frontend, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -29,17 +29,23 @@ Two lowering strategies (DESIGN.md §10):
 
 * **whole-array** ("Mode B") — the generic fallback for programs the
   streamed contract rejects only *softly* (multi-store nests, strided or
-  transposed stores, reads of unwritten regions, multiple sinks): every
-  array becomes a whole VMEM ref, each nest is vectorized over its full
-  domain in program order, and partial stores update a value initialized
-  from the ref (so uncovered elements keep their initial values, exactly
-  like ``sim.sequential_exec``).
+  transposed stores, reads of unwritten regions, multiple sinks,
+  reduction-carrying nests): every array becomes a whole VMEM ref, each
+  nest is vectorized over its full domain in program order, and partial
+  stores update a value initialized from the ref (so uncovered elements
+  keep their initial values, exactly like ``sim.sequential_exec``).
+  Canonical accumulations — the innermost iv absent from the store index,
+  every load of the stored array at the store address (``two_mm``-style
+  matmuls) — vectorize the outer ivs and fold the innermost one with a
+  ``lax.fori_loop`` left fold, which matches the sequential float rounding
+  bit for bit.
 
-Programs outside both contracts (imperfect or >2-deep nests — reductions,
-``two_mm``-style accumulations, multi-chain tasks ``_access_sequence``
-rejects) raise the structured :class:`UnlowerableProgram` instead of an
-opaque downstream failure; ``CompileResult.emit_pallas`` records the
-rejection in ``diagnostics``.
+Programs outside both contracts (multi-chain tasks, imperfect nests, loose
+top-level ops, non-canonical reductions — the shape vocabulary is
+``ir.nest_shape``) raise the structured :class:`UnlowerableProgram`
+carrying machine-readable :class:`NestContractViolation` entries instead
+of an opaque downstream failure; ``CompileResult.emit_pallas`` records the
+rejection (with its violation codes) in ``diagnostics``.
 
 The kernel is emitted as *source text* and ``exec``'d: the source is the
 debuggable artifact (``PallasKernel.source``), and the golden test asserts
@@ -52,8 +58,9 @@ import re
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
-from .errors import UnlowerableProgram
-from .ir import AffExpr, ArithOp, ConstOp, LoadOp, Loop, Program, StoreOp
+from .errors import NestContractViolation, UnlowerableProgram
+from .ir import (AffExpr, ArithOp, ConstOp, LoadOp, Loop, Program, StoreOp,
+                 nest_shape)
 
 DEFAULT_BLOCK_ROWS = 8
 
@@ -98,38 +105,54 @@ class _Nest:
     ops: list  # innermost body, program order
     loads: list[tuple[LoadOp, _Access]] = field(default_factory=list)
     stores: list[tuple[StoreOp, _Access]] = field(default_factory=list)
+    # reduction carry (canonical accumulation): the innermost iv is absent
+    # from the store index, and every load of the stored array matches the
+    # store address exactly — ``dst[outs] = f(dst[outs], inputs[.., red..])``
+    red_iv: Optional[str] = None
+    red_loads: tuple = ()  # uids of the carried-accumulator loads
+
+
+def _hard(hard: list, code: str, detail: str) -> None:
+    hard.append(NestContractViolation(code, "codegen", detail))
 
 
 def _classify_access(nest_ivs, index, arr_shape, what, tag, hard):
     dims = []
     seen_ivs: set = set()
     if len(index) != len(arr_shape):
-        hard.append(f"nest '{tag}': {what} rank {len(index)} != array rank "
-                    f"{len(arr_shape)}")
+        _hard(hard, "rank-mismatch",
+              f"nest '{tag}': {what} rank {len(index)} != array rank "
+              f"{len(arr_shape)}")
         return None
     if len(arr_shape) > 2:
-        hard.append(f"nest '{tag}': {what} of a rank-{len(arr_shape)} array "
-                    "(only 1-D/2-D arrays lower)")
+        _hard(hard, "rank",
+              f"nest '{tag}': {what} of a rank-{len(arr_shape)} array "
+              "(only 1-D/2-D arrays lower)")
         return None
     for e in index:
         e = e if isinstance(e, AffExpr) else AffExpr({}, int(e))
         if len(e.coeffs) > 1:
-            hard.append(f"nest '{tag}': non-separable {what} index {e!r}")
+            _hard(hard, "non-separable",
+                  f"nest '{tag}': non-separable {what} index {e!r}")
             return None
         if e.const < 0:
-            hard.append(f"nest '{tag}': negative {what} offset {e!r}")
+            _hard(hard, "negative-offset",
+                  f"nest '{tag}': negative {what} offset {e!r}")
             return None
         if e.coeffs:
             (ivn, coef), = e.coeffs.items()
             if ivn not in nest_ivs:
-                hard.append(f"nest '{tag}': {what} uses unknown iv '{ivn}'")
+                _hard(hard, "unknown-iv",
+                      f"nest '{tag}': {what} uses unknown iv '{ivn}'")
                 return None
             if coef < 1:
-                hard.append(f"nest '{tag}': negative-stride {what} {e!r}")
+                _hard(hard, "negative-stride",
+                      f"nest '{tag}': negative-stride {what} {e!r}")
                 return None
             if ivn in seen_ivs:
-                hard.append(f"nest '{tag}': iv '{ivn}' in two {what} dims "
-                            "(diagonal access)")
+                _hard(hard, "diagonal-access",
+                      f"nest '{tag}': iv '{ivn}' in two {what} dims "
+                      "(diagonal access)")
                 return None
             seen_ivs.add(ivn)
             dims.append((ivn, coef, e.const))
@@ -138,43 +161,50 @@ def _classify_access(nest_ivs, index, arr_shape, what, tag, hard):
     return dims
 
 
-def _extract_nests(p: Program) -> tuple[list[_Nest], list[str]]:
-    hard: list[str] = []
+def _extract_nests(p: Program) -> tuple[list[_Nest], list]:
+    hard: list = []
     nests: list[_Nest] = []
-    for item in p.body:
-        if not isinstance(item, Loop):
-            hard.append("top-level op outside any loop nest")
+    shape = nest_shape(p)
+    for ti, item in enumerate(p.body):
+        ts = shape.task(ti)
+        # one contract check, one place: the structural gate is the
+        # ir.nest_shape classifier, not an ad-hoc re-traversal
+        if ts.kind == "ops":
+            _hard(hard, "top-level-ops",
+                  "top-level op outside any loop nest "
+                  "(run transforms.Normalize to sink loose ops)")
+            continue
+        if ts.kind == "imperfect":
+            _hard(hard, "imperfect-nest",
+                  f"nest '{item.ivname}': imperfect nest (ops mixed with an "
+                  "inner loop; run transforms.Normalize to sink them)")
+            continue
+        if ts.kind == "multi_loop":
+            _hard(hard, "multi-chain",
+                  f"nest '{item.ivname}': multiple inner loops at one level "
+                  "(multi-chain tasks have no single vectorized domain)")
             continue
         ivs, trips, cur = [], [], item
-        ops = None
+        ops, chain_ok = None, True
         while True:
+            if cur.lb != 0:
+                _hard(hard, "non-zero-lb",
+                      f"nest '{item.ivname}': non-zero lower bound")
+                chain_ok = False
+                break
             ivs.append(cur.ivname)
             trips.append(cur.trip)
-            if cur.lb != 0:
-                hard.append(f"nest '{item.ivname}': non-zero lower bound")
-                break
             inner = [x for x in cur.body if isinstance(x, Loop)]
-            plain = [x for x in cur.body if not isinstance(x, Loop)]
-            if inner and plain:
-                hard.append(f"nest '{item.ivname}': imperfect nest (ops mixed "
-                            "with an inner loop)")
-                break
-            if len(inner) > 1:
-                hard.append(f"nest '{item.ivname}': multiple inner loops at "
-                            "one level")
-                break
             if inner:
-                if len(ivs) >= 2:
-                    hard.append(f"nest '{item.ivname}': deeper than 2 loops")
-                    break
                 cur = inner[0]
                 continue
-            ops = plain
+            ops = cur.body
             break
-        if ops is None:
+        if not chain_ok:
             continue
         nest = _Nest(loop=item, ivs=ivs, trips=trips, ops=ops)
         ok = True
+        red_stores = []  # stores whose index omits the innermost iv
         for op in ops:
             if isinstance(op, LoadOp):
                 dims = _classify_access(set(ivs), op.index,
@@ -192,32 +222,64 @@ def _extract_nests(p: Program) -> tuple[list[_Nest], list[str]]:
                     ok = False
                     break
                 used = [d[0] for d in dims if d[0] is not None]
-                if sorted(used) != sorted(ivs) or len(used) != len(dims):
-                    hard.append(f"nest '{item.ivname}': store to "
-                                f"'{op.array}' must use every nest iv in "
-                                "exactly one dim (no constant dims)")
+                if (sorted(used) == sorted(ivs[:-1]) and len(ivs) >= 2
+                        and len(used) == len(dims)):
+                    # reduction-carrying store: every iv but the innermost
+                    red_stores.append(op)
+                elif sorted(used) != sorted(ivs) or len(used) != len(dims):
+                    _hard(hard, "store-shape",
+                          f"nest '{item.ivname}': store to '{op.array}' "
+                          "must use every nest iv (or every iv but the "
+                          "innermost reduction iv) in exactly one dim "
+                          "(no constant dims)")
                     ok = False
                     break
                 nest.stores.append((op, _Access(op.array, dims)))
             elif isinstance(op, ArithOp):
                 if op.fn not in _ARITH_FMT:
-                    hard.append(f"nest '{item.ivname}': unsupported op "
-                                f"'{op.fn}'")
+                    _hard(hard, "unsupported-op",
+                          f"nest '{item.ivname}': unsupported op '{op.fn}'")
                     ok = False
                     break
             elif not isinstance(op, ConstOp):
-                hard.append(f"nest '{item.ivname}': unsupported IR node "
-                            f"{type(op).__name__}")
+                _hard(hard, "unsupported-node",
+                      f"nest '{item.ivname}': unsupported IR node "
+                      f"{type(op).__name__}")
                 ok = False
                 break
         if not ok:
             continue
+        if red_stores:
+            # canonical accumulation: ONE reduction store, and every load
+            # of the carried array matches the store address exactly, so
+            # the nest is a left fold over the innermost iv —
+            # dst[outs] = f(dst[outs], inputs[.., red, ..]) per step
+            if len(nest.stores) != 1:
+                _hard(hard, "reduction",
+                      f"nest '{item.ivname}': reduction with "
+                      f"{len(nest.stores)} stores (only single-store "
+                      "accumulations lower)")
+                continue
+            sop, sacc = nest.stores[0]
+            carried = [(op_, a) for op_, a in nest.loads
+                       if a.array == sacc.array]
+            if not carried or any(a.dims != sacc.dims for _, a in carried):
+                _hard(hard, "reduction",
+                      f"nest '{item.ivname}': reduction — reads "
+                      f"'{sacc.array}' it also writes at a different "
+                      "address (non-canonical carried accumulation)")
+                continue
+            nest.red_iv = ivs[-1]
+            nest.red_loads = tuple(op_.uid for op_, _ in carried)
         rd = {a.array for _, a in nest.loads}
         wr = {a.array for _, a in nest.stores}
         for arr in sorted(rd & wr):
-            hard.append(f"nest '{item.ivname}': reduction — reads '{arr}' "
-                        "it also writes (carried accumulation has no "
-                        "streaming lowering)")
+            if nest.red_iv is not None and arr == nest.stores[0][1].array:
+                continue  # the canonical carry, handled above
+            _hard(hard, "reduction",
+                  f"nest '{item.ivname}': reduction — reads '{arr}' it "
+                  "also writes (carried accumulation outside the "
+                  "canonical innermost-axis pattern has no lowering)")
             ok = False
         if ok:
             nests.append(nest)
@@ -226,8 +288,9 @@ def _extract_nests(p: Program) -> tuple[list[_Nest], list[str]]:
         for _, acc in nest.stores:
             prev = writers.get(acc.array)
             if prev is not None and prev != nest.loop.ivname:
-                hard.append(f"array '{acc.array}' written by two nests "
-                            f"('{prev}', '{nest.loop.ivname}')")
+                _hard(hard, "multi-writer",
+                      f"array '{acc.array}' written by two nests "
+                      f"('{prev}', '{nest.loop.ivname}')")
             writers[acc.array] = nest.loop.ivname
     return nests, hard
 
@@ -265,6 +328,10 @@ def _plan_streamed(p: Program, nests: list[_Nest],
     stages: list[_StagePlan] = []
     for nest in nests:
         tag = nest.loop.ivname
+        if nest.red_iv is not None:
+            soft.append(f"nest '{tag}': streamed mode does not pipeline "
+                        "reduction-carrying nests (whole-array fallback)")
+            return None, soft
         if len(nest.ivs) != 2:
             soft.append(f"nest '{tag}': streamed mode needs depth-2 nests")
             return None, soft
@@ -555,6 +622,18 @@ def _strided_set(dst, val, starts, steps):
 '''
 
 
+def _align_suffix(val_axes: list, outs: list) -> str:
+    """Indexing suffix aligning a loaded value's axes with the accumulator's
+    (store-dim-ordered) axes; empty when broadcasting already lines up."""
+    if len(outs) <= 1 or val_axes == outs:
+        return ""
+    if len(val_axes) == 2:
+        return ".T"
+    if not val_axes:
+        return ""  # scalar broadcasts
+    return "[:, None]" if val_axes[0] == outs[0] else "[None, :]"
+
+
 def _emit_whole(p: Program, nests: list[_Nest], dtype: str) -> tuple[str, dict]:
     stored = []
     for nest in nests:
@@ -573,9 +652,88 @@ def _emit_whole(p: Program, nests: list[_Nest], dtype: str) -> tuple[str, dict]:
             body.append(f"v_{_ident(a)} = r_{_ident(a)}[...]")
             inited.add(a)
 
+    red_count = 0
     for nest in nests:
         ivpos = {ivn: k for k, ivn in enumerate(nest.ivs)}
         trips = nest.trips
+        if nest.red_iv is not None:
+            # canonical accumulation: vectorize the outer ivs, fold the
+            # innermost one with lax.fori_loop — a left fold in program
+            # order, so the float rounding matches sequential_exec bit for
+            # bit (the _exact golden tests rely on this)
+            _, sacc = nest.stores[0]
+            init(sacc.array)
+            red_outs = [ivn for ivn, _, _ in sacc.dims]
+            nk = trips[-1]
+            acc_shape = tuple(trips[ivpos[ivn]] for ivn, _, _ in sacc.dims)
+            sels = [_sl(const, const + coef * (trips[ivpos[ivn]] - 1) + 1,
+                        coef)
+                    for ivn, coef, const in sacc.dims]
+            dst = f"v_{_ident(sacc.array)}"
+            body.append(f"# nest {nest.loop.ivname}: reduction over "
+                        f"'{nest.red_iv}' ({nk} steps), domain {acc_shape}")
+            acc0 = f"a_red{red_count}"
+            body.append(f"{acc0} = {dst}[" + ", ".join(sels) + "]")
+            inner: list[str] = []
+            names = {}
+            final = None
+            for op in nest.ops:
+                if isinstance(op, ConstOp):
+                    names[op.result] = _lit(op.value)
+                elif isinstance(op, LoadOp):
+                    if op.uid in nest.red_loads:
+                        names[op.result] = "_acc"  # the fold carry
+                        continue
+                    acc_ = next(a for o, a in nest.loads if o is op)
+                    init(acc_.array)
+                    lsels, val_axes = [], []
+                    for ivn, coef, const in acc_.dims:
+                        if ivn is None:
+                            lsels.append(str(const))
+                        elif ivn == nest.red_iv:
+                            ix = "_k" if coef == 1 else f"{coef} * _k"
+                            lsels.append(f"{ix} + {const}" if const else ix)
+                        else:
+                            n = trips[ivpos[ivn]]
+                            lsels.append(
+                                _sl(const, const + coef * (n - 1) + 1, coef))
+                            val_axes.append(ivn)
+                    expr = (f"v_{_ident(acc_.array)}[" + ", ".join(lsels)
+                            + "]" + _align_suffix(val_axes, red_outs))
+                    names[op.result] = _vname(op.result)
+                    inner.append(f"{names[op.result]} = {expr}")
+                elif isinstance(op, ArithOp):
+                    names[op.result] = _vname(op.result)
+                    inner.append(f"{names[op.result]} = " + _ARITH_FMT[op.fn]
+                                 .format(*(names[a] for a in op.args)))
+                elif isinstance(op, StoreOp):
+                    final = names[op.value]
+            assert final is not None
+            body.append(f"def _red{red_count}(_k, _acc):")
+            body += ["    " + b for b in inner]
+            body.append(f"    return jnp.broadcast_to({final}, "
+                        f"{acc_shape!r}).astype(DTYPE)")
+            body.append(f"{acc0} = jax.lax.fori_loop(0, {nk}, "
+                        f"_red{red_count}, {acc0})")
+            starts = [const for _, _, const in sacc.dims]
+            steps = [coef for _, coef, _ in sacc.dims]
+            shape = p.arrays[sacc.array].shape
+            full = (all(st == 1 for st in steps)
+                    and all(s0 == 0 for s0 in starts)
+                    and acc_shape == shape)
+            if full:
+                body.append(f"{dst} = jnp.broadcast_to({acc0}, {shape!r})")
+            elif all(st == 1 for st in steps):
+                body.append(f"{dst} = {dst}.at[" + ", ".join(sels)
+                            + f"].set({acc0})")
+            else:
+                exts_t = ("(" + ", ".join(map(str, acc_shape))
+                          + ("," if len(acc_shape) == 1 else "") + ")")
+                body.append(
+                    f"{dst} = _strided_set({dst}, jnp.broadcast_to({acc0}, "
+                    f"{exts_t}), {tuple(starts)!r}, {tuple(steps)!r})")
+            red_count += 1
+            continue
         body.append(f"# nest {nest.loop.ivname}: domain {tuple(trips)}")
         names: dict[str, str] = {}
         for op in nest.ops:
@@ -746,7 +904,8 @@ def lower_program(p: Program, *, block_rows: Optional[int] = None,
     if hard:
         raise UnlowerableProgram(p.name, hard)
     if not nests:
-        raise UnlowerableProgram(p.name, ["program has no loop nests"])
+        raise UnlowerableProgram(p.name, [NestContractViolation(
+            "empty", "codegen", "program has no loop nests")])
     plan, soft = _plan_streamed(p, nests, block_rows or DEFAULT_BLOCK_ROWS)
     if plan is not None:
         src, meta = _emit_streamed(p, plan, buffering, dtype)
@@ -797,7 +956,8 @@ def emit_pallas(result, point=None, *, buffering: str = "double",
     except UnlowerableProgram as e:
         result.diagnostics.append({
             "kind": "codegen-unlowerable", "program": e.program_name,
-            "reasons": list(e.reasons)})
+            "reasons": list(e.reasons),
+            "codes": [v.code for v in e.violations]})
         raise
     k.modeled_latency = point.latency
     k.point_desc = point.desc

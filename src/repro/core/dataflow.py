@@ -25,7 +25,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Optional
 
-from .ir import LoadOp, Loop, Program, StoreOp
+from .errors import NestContractViolation
+from .ir import LoadOp, Loop, Program, StoreOp, nest_shape
 from .scheduler import Schedule
 from .transforms import to_spsc  # noqa: F401  (compatibility re-export)
 
@@ -48,13 +49,22 @@ class DataflowInfo:
     applicable: bool
     reason: str = ""
     channels: list[Channel] = field(default_factory=list)
+    #: structured rejection (errors.NestContractViolation) when inapplicable;
+    #: ``reason`` stays its string rendering for compat (JSON snapshots).
+    diagnostic: Optional[NestContractViolation] = None
+
+
+def _reject(code: str, detail: str) -> DataflowInfo:
+    d = NestContractViolation(code, "dataflow", detail)
+    return DataflowInfo(False, reason=detail, diagnostic=d)
 
 
 def _tasks(p: Program) -> list[Loop]:
     ts = []
     for item in p.body:
         if not isinstance(item, Loop):
-            raise ValueError("dataflow model expects top-level loop nests only")
+            raise ValueError("dataflow model expects top-level loop nests only"
+                             " (run transforms.Normalize to sink loose ops)")
         ts.append(item)
     return ts
 
@@ -74,68 +84,114 @@ def _task_accesses(p: Program, task: Loop):
     return out
 
 
-def _iter_space(anc: list[Loop]):
-    """Yield env dicts in sequential order for the given loop chain."""
+def _subnest_latency(p: Program, s: Schedule, loop: Loop) -> int:
+    """Latency of one sub-nest in isolation: max over its ops of the op's
+    theta offset from the sub-nest root plus the II-weighted span of the
+    loops at-or-below the root (``Schedule.nest_latency`` restricted to an
+    arbitrary loop instead of a top-level item)."""
+    base = s.theta[loop.uid]
+    worst = 0
+    for node, anc in p.walk():
+        if isinstance(node, Loop):
+            continue
+        idx = next((i for i, a in enumerate(anc) if a is loop), None)
+        if idx is None:
+            continue
+        span = sum(s.iis[l.uid] * (l.trip - 1) for l in anc[idx:])
+        worst = max(worst, s.theta[node.uid] - base + span
+                    + p.op_latency(node))
+    return worst
 
-    def rec(i, env):
-        if i == len(anc):
-            yield dict(env)
-            return
-        l = anc[i]
-        for v in range(l.lb, l.ub):
-            env[l.ivname] = v
-            yield from rec(i + 1, env)
-        del env[l.ivname]
 
-    yield from rec(0, {})
+def _task_ticks(p: Program, task: Loop, s: Optional[Schedule] = None):
+    """Sequential execution points ("ticks") of a task, in program order.
 
+    Returns ``[(static_start, env, ops)]``.  One tick per innermost loop
+    iteration of each chain, plus one tick per maximal run of loose ops
+    (ops adjacent to a sub-loop — an imperfect nest).  This generalizes the
+    old single-counter model: a perfect nest yields exactly its iteration
+    space with ``static_start = sum(II_l * iv_l)``; sequential sub-loops
+    run back-to-back, each draining fully before its sibling starts (the
+    cross-chain sequencing edge of the Vitis model); loose ops advance the
+    clock by their summed latency.
 
-def _task_chain(p: Program, task: Loop) -> Optional[list[Loop]]:
-    """The unique loop chain containing every memory access of ``task``,
-    or None when accesses sit under different chains (a multi-loop task the
-    runtime model below cannot express as one iteration counter)."""
-    chains = {tuple(l.uid for l in anc): anc
-              for _, anc in _task_accesses(p, task)}
-    if len(chains) != 1:
-        return None
-    (chain,) = chains.values()
-    return chain
+    Without a schedule the static starts are all 0 (order-only callers:
+    ``_access_sequence``)."""
+    ticks: list = []
+
+    def ii_of(l: Loop) -> int:
+        return s.iis[l.uid] if s is not None else 0
+
+    def rec(items, env, base) -> int:
+        """Emit ticks for one execution of ``items`` starting at ``base``;
+        returns the clock after the region completes (drain included)."""
+        cur = base
+        pending: list = []
+        subs_present = any(isinstance(it, Loop) for it in items)
+
+        def flush():
+            nonlocal cur
+            if pending:
+                ticks.append((cur, dict(env), list(pending)))
+                if s is not None:
+                    cur += sum(p.op_latency(op) for op in pending)
+                pending.clear()
+
+        for it in items:
+            if isinstance(it, Loop):
+                flush()
+                for v in range(it.lb, it.ub):
+                    env[it.ivname] = v
+                    rec(it.body, env, cur + ii_of(it) * (v - it.lb))
+                del env[it.ivname]
+                cur += _subnest_latency(p, s, it) if s is not None else 0
+            else:
+                pending.append(it)
+        if not subs_present:
+            # innermost body: ONE tick per iteration at the II-weighted
+            # start (the old model), ops contributing no clock advance
+            if pending:
+                ticks.append((cur, dict(env), list(pending)))
+                pending.clear()
+        else:
+            flush()
+        return cur
+
+    # the task loop itself is part of every chain: passing ``[task]`` (not
+    # ``task.body``) makes the root iv enumerate like any other loop
+    rec([task], {}, 0)
+    return ticks
 
 
 def _access_sequence(p: Program, task: Loop, array: str, want_write: bool):
     """Sequential (iteration_counter, address) sequence of a task's accesses
-    to ``array``.  The iteration counter is the flattened innermost index."""
-    accs = [(op, anc) for op, anc in _task_accesses(p, task)
-            if op.array == array and isinstance(op, StoreOp) == want_write]
-    if not accs:
-        return []
-    # the iteration counter must be comparable across every access of the
-    # task, which requires all accesses to live under one loop chain;
-    # analyze_dataflow() pre-filters such tasks, so this is a hard error
-    chain = _task_chain(p, task)
-    if chain is None:
-        raise ValueError(
-            f"dataflow model: task '{task.ivname}' accesses memory from "
-            "multiple loop chains; only single perfect-nest tasks have a "
-            "well-defined FIFO access order (analyze_dataflow rejects these)")
+    to ``array``.  The iteration counter is the task-wide tick index: the
+    flattened innermost index of a perfect nest, and the program-order tick
+    of the generalized traversal for multi-loop / imperfect tasks (per-chain
+    FIFO order plus cross-chain sequencing)."""
     seq = []
-    for q, env in enumerate(_iter_space(chain)):
-        for op, anc in accs:
-            addr = tuple(e.eval(env) for e in op.index)
-            seq.append((q, addr))
+    for q, (_, env, ops) in enumerate(_task_ticks(p, task)):
+        for op in ops:
+            if not isinstance(op, (LoadOp, StoreOp)) or op.array != array:
+                continue
+            if isinstance(op, StoreOp) != want_write:
+                continue
+            seq.append((q, tuple(e.eval(env) for e in op.index)))
     return seq
 
 
 def analyze_dataflow(p: Program) -> DataflowInfo:
+    shape = nest_shape(p)
+    for t in shape.tasks:
+        if t.kind == "ops":
+            return _reject(
+                "top-level-ops",
+                f"task {t.index} is a bare op, not a loop nest (run "
+                "transforms.Normalize to sink loose ops into nests)")
     tasks = _tasks(p)
-    # each task must be a single perfect nest: the runtime model flattens a
-    # task's iteration space into ONE counter, which is ill-defined when
-    # memory accesses sit under different loop chains (e.g. fused siblings)
-    for ti, t in enumerate(tasks):
-        if _task_accesses(p, t) and _task_chain(p, t) is None:
-            return DataflowInfo(
-                False, f"task {ti} ('{t.ivname}') is not a single perfect "
-                       "nest: accesses span multiple loop chains")
+    # NOTE: multi-loop and imperfect tasks are modeled, not rejected — the
+    # generalized tick traversal gives every task a well-defined flattened
+    # access order (per-chain FIFO orders + cross-chain sequencing edges).
     # array -> (writer task ids, reader task ids)
     writers: dict[str, set[int]] = {}
     readers: dict[str, set[int]] = {}
@@ -146,29 +202,30 @@ def analyze_dataflow(p: Program) -> DataflowInfo:
     channels = []
     for name in p.arrays:
         ws = writers.get(name, set())
-        rs = readers.get(name, set()) - ws  # external consumers
         rs_all = readers.get(name, set())
         # every channel in a Vitis dataflow region must be SPSC — including
         # function-argument inputs fanning out to several processes
         if len(ws) > 1:
-            return DataflowInfo(False, f"{name} has multiple producers")
+            return _reject("multi-producer", f"{name} has multiple producers")
         if len(rs_all - ws) > 1:
-            return DataflowInfo(False, f"{name} has multiple consumers")
+            return _reject("multi-consumer", f"{name} has multiple consumers")
         cross = {(w, r) for w in ws for r in rs_all if w != r}
         if not cross:
             continue
         arr = p.arrays[name]
         if arr.is_arg:
-            return DataflowInfo(False, f"intermediate {name} is a function argument")
+            return _reject("arg-intermediate",
+                           f"intermediate {name} is a function argument")
         (wtask,) = ws
         (rtask,) = tuple(rs_all - ws)
         if rtask < wtask:
             # the consumer runs BEFORE the producer in program order: it
             # reads the array's initial contents, which no channel process
             # network can feed — the region is not a dataflow pipeline
-            return DataflowInfo(
-                False, f"{name} consumer (task {rtask}) precedes its "
-                       f"producer (task {wtask})")
+            return _reject(
+                "consumer-first",
+                f"{name} consumer (task {rtask}) precedes its "
+                f"producer (task {wtask})")
         wseq = [a for _, a in _access_sequence(p, tasks[wtask], name, True)]
         rseq = [a for _, a in _access_sequence(p, tasks[rtask], name, False)]
         kind = "fifo" if wseq == rseq else "pingpong"
@@ -190,16 +247,18 @@ def vitis_dataflow_latency(p: Program, s: Schedule) -> tuple[int, DataflowInfo]:
         return s.sequential_nests_latency(), info
 
     tasks = _tasks(p)
+    shape = nest_shape(p)
     n = len(tasks)
-    # static per-iteration times within each task (no stalls)
+    # static per-tick times within each task (no stalls).  For a perfect
+    # nest the ticks are exactly the flattened iteration space with start
+    # sum(II_l * iv_l) — the original single-counter model; generalized
+    # shapes additionally serialize sibling sub-loops (drain between
+    # chains) and advance past loose ops.
     static_times: list[list[int]] = []
     tails: list[int] = []
     for t in tasks:
-        chain = _task_chain(p, t) if _task_accesses(p, t) else None
-        times = []
-        if chain is not None:
-            for env in _iter_space(chain):
-                times.append(sum(s.iis[l.uid] * env[l.ivname] for l in chain))
+        times = ([t0 for t0, _, _ in _task_ticks(p, t, s)]
+                 if _task_accesses(p, t) else [])
         static_times.append(times)
         tails.append(s.nest_latency(t) - (len(times) and
                                           (times[-1] - times[0]) or 0))
@@ -215,11 +274,17 @@ def vitis_dataflow_latency(p: Program, s: Schedule) -> tuple[int, DataflowInfo]:
     def write_times(ti: int, array: str):
         seq = _access_sequence(p, tasks[ti], array, True)
         wr = p.arrays[array].wr_latency
-        # offset of the store inside one iteration
+        # offset of the store inside one tick.  Perfect nests anchor at the
+        # task root (original model); generalized shapes anchor at the
+        # store's chain root, because the cross-chain serialization is
+        # already part of the static tick base (anchoring at the task root
+        # would double-count the drain of earlier sibling chains).
+        perfect = shape.task(ti).kind == "perfect"
         offs = {}
         for op, anc in _task_accesses(p, tasks[ti]):
             if isinstance(op, StoreOp) and op.array == array:
-                offs[op.uid] = s.theta[op.uid] - s.theta[tasks[ti].uid]
+                anchor = tasks[ti] if perfect or len(anc) < 2 else anc[1]
+                offs[op.uid] = s.theta[op.uid] - s.theta[anchor.uid]
         off = min(offs.values()) if offs else 0
         return [start[ti][q] + off + wr for q, _ in seq]
 
@@ -253,7 +318,11 @@ def vitis_dataflow_latency(p: Program, s: Schedule) -> tuple[int, DataflowInfo]:
 # Resource model (Fig. 9)
 # ---------------------------------------------------------------------------
 
-_DSP = {"mul": 3, "add": 2, "sub": 2, "div": 0, "min": 0, "max": 0, "cmp": 0}
+_DSP = {"mul": 3, "add": 2, "sub": 2, "div": 0, "min": 0, "max": 0, "cmp": 0,
+        # exp: iterative fp unit built from mul/add stages (~7 DSPs on
+        # UltraScale+); emitted only by the tracing frontend, outside the
+        # paper's Fig. 9 benchmark set
+        "exp": 7}
 
 RESOURCE_KEYS = ("bram_bytes", "ff_bits", "lut", "dsp")
 

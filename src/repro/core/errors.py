@@ -36,12 +36,49 @@ class CacheFault(CompileError):
     """The persistent cache is unusable beyond per-entry repair."""
 
 
+class NestContractViolation(CompileError):
+    """A layer was handed a nest shape outside what it supports.
+
+    The shape vocabulary is `ir.nest_shape` (DESIGN.md §11): every rejection
+    names a machine-readable ``code`` (e.g. ``"multi-chain"``,
+    ``"imperfect-nest"``, ``"reduction"``, ``"top-level-ops"``), the layer
+    that refused (``where``), and the offending task/array in ``detail`` —
+    replacing the old reject-by-diagnostic-string sites in ``dataflow.py``
+    and ``codegen.py`` so ``CompileResult.diagnostics`` is uniform.
+    """
+
+    def __init__(self, code: str, where: str, detail: str):
+        self.code = str(code)
+        self.where = str(where)
+        self.detail = str(detail)
+        super().__init__(f"{where}: [{code}] {detail}")
+
+    def as_diagnostic(self) -> dict:
+        return {"kind": f"{self.where}-rejection", "code": self.code,
+                "detail": self.detail}
+
+
+class UntraceableFunction(CompileError):
+    """The JAX tracing frontend met a function it cannot lower to Program IR.
+
+    Carries the unsupported jaxpr primitive (or structural feature) so
+    callers can widen the traced function rather than string-match."""
+
+    def __init__(self, fn_name: str, primitive: str, detail: str = ""):
+        self.fn_name = str(fn_name)
+        self.primitive = str(primitive)
+        self.detail = str(detail)
+        super().__init__(
+            f"cannot trace '{self.fn_name}': unsupported {self.primitive}"
+            + (f" ({self.detail})" if detail else ""))
+
+
 class UnlowerableProgram(CompileError):
     """The program has no Pallas lowering (``codegen.emit_pallas``).
 
-    Raised with the full list of structural ``reasons`` — imperfect or
-    too-deep nests, reductions (a nest reading an array it writes), multi-
-    writer arrays, non-affine-separable accesses — instead of an opaque
+    Raised with the full list of structural ``reasons`` — each a
+    :class:`NestContractViolation` (legacy callers may still pass strings;
+    they are wrapped with code ``"legacy"``) — instead of an opaque
     downstream failure.  ``emit_pallas`` additionally records the rejection
     in ``CompileResult.diagnostics`` (kind ``codegen-unlowerable``) so the
     DSE trace shows which design points cannot become kernels.
@@ -49,6 +86,10 @@ class UnlowerableProgram(CompileError):
 
     def __init__(self, program_name: str, reasons):
         self.program_name = str(program_name)
+        self.violations = [
+            r if isinstance(r, NestContractViolation)
+            else NestContractViolation("legacy", "codegen", str(r))
+            for r in reasons]
         self.reasons = [str(r) for r in reasons]
         super().__init__(
             f"program '{self.program_name}' has no Pallas lowering: "

@@ -196,8 +196,17 @@ class Loop:
     def trip(self) -> int:
         return self.ub - self.lb
 
+    def sub_loops(self) -> list["Loop"]:
+        return [it for it in self.body if isinstance(it, Loop)]
+
+    def body_ops(self) -> list:
+        return [it for it in self.body if not isinstance(it, Loop)]
+
 
 # The paper's latency model (Fig. 3 / §3.1, Xilinx FP IP via bind_op).
+# "exp" is not in the paper's benchmark set; 12 cycles matches the deep
+# iterative fp units (div) of the same IP family — the tracing frontend
+# emits it for softmax / decay math.
 DEFAULT_OP_DELAYS = {
     "add": 5,
     "sub": 5,
@@ -206,6 +215,7 @@ DEFAULT_OP_DELAYS = {
     "min": 1,
     "max": 1,
     "cmp": 1,
+    "exp": 12,
     "const": 0,
 }
 
@@ -430,3 +440,114 @@ def position_keys(p: Program) -> dict[int, tuple[int, ...]]:
 
     rec(p.body, ())
     return keys
+
+
+# ---------------------------------------------------------------------------
+# The loop-nest contract: one classifier, consulted by every layer
+# ---------------------------------------------------------------------------
+#
+# Historically each layer re-derived (and silently assumed) the program's
+# nest structure: dataflow rejected multi-chain tasks in `_access_sequence`,
+# transforms returned None from `_perfect_chain`, codegen hand-rolled its own
+# depth/reduction checks.  `nest_shape` is now the single source of truth:
+# it names every shape the IR can express — perfect nests, imperfect nests
+# (ops alongside a sub-loop), multi-loop tasks (sequential sub-loops under
+# one task), reduction carries (arrays a task both reads and writes) — and
+# downstream layers decide what they support in terms of this vocabulary.
+
+#: TaskShape.kind values, from most to least restrictive.
+TASK_KINDS = ("perfect", "imperfect", "multi_loop", "ops")
+
+
+@dataclass(frozen=True)
+class TaskShape:
+    """Structural classification of one top-level item (a "task")."""
+
+    index: int                 # position in Program.body
+    kind: str                  # one of TASK_KINDS
+    depth: int                 # max loop depth under the task (0 for bare ops)
+    #: every root->innermost loop chain, as loop-uid tuples in program order;
+    #: a perfect nest has exactly one, sequential sub-loops contribute more.
+    chains: tuple[tuple[int, ...], ...]
+    #: uids of "loose" ops — ops whose enclosing body also holds a sub-loop
+    #: (i.e. not in an innermost body); nonempty marks the nest imperfect.
+    loose_ops: tuple[int, ...]
+    #: arrays the task both loads and stores (reduction / recurrence carries).
+    reductions: tuple[str, ...]
+
+    @property
+    def is_perfect(self) -> bool:
+        return self.kind == "perfect"
+
+    @property
+    def multi_chain(self) -> bool:
+        return len(self.chains) > 1
+
+
+@dataclass(frozen=True)
+class NestShape:
+    """`nest_shape(p)` result: per-task shapes plus whole-program views."""
+
+    tasks: tuple[TaskShape, ...]
+
+    @property
+    def kinds(self) -> tuple[str, ...]:
+        return tuple(t.kind for t in self.tasks)
+
+    @property
+    def all_perfect(self) -> bool:
+        return all(t.is_perfect for t in self.tasks)
+
+    @property
+    def max_depth(self) -> int:
+        return max((t.depth for t in self.tasks), default=0)
+
+    def task(self, index: int) -> TaskShape:
+        return self.tasks[index]
+
+
+def _classify_task(index: int, item) -> TaskShape:
+    if not isinstance(item, Loop):
+        return TaskShape(index=index, kind="ops", depth=0, chains=(),
+                         loose_ops=(item.uid,), reductions=())
+    chains: list[tuple[int, ...]] = []
+    loose: list[int] = []
+    loaded: set[str] = set()
+    stored: set[str] = set()
+    depth = 0
+
+    def rec(loop: Loop, path: tuple[int, ...]):
+        nonlocal depth
+        path = path + (loop.uid,)
+        depth = max(depth, len(path))
+        subs = loop.sub_loops()
+        ops = loop.body_ops()
+        for op in ops:
+            if isinstance(op, LoadOp):
+                loaded.add(op.array)
+            elif isinstance(op, StoreOp):
+                stored.add(op.array)
+            if subs:
+                loose.append(op.uid)
+        if not subs:
+            chains.append(path)
+        for sub in subs:
+            rec(sub, path)
+
+    rec(item, ())
+    kind = ("multi_loop" if len(chains) > 1
+            else "imperfect" if loose else "perfect")
+    return TaskShape(index=index, kind=kind, depth=depth,
+                     chains=tuple(chains), loose_ops=tuple(loose),
+                     reductions=tuple(sorted(loaded & stored)))
+
+
+def nest_shape(p: Program) -> NestShape:
+    """Classify every top-level task of ``p`` (the loop-nest contract).
+
+    This is the ONE place nest structure is derived; `dataflow`,
+    `transforms`, `codegen` and the tracing frontend all consult it instead
+    of re-deriving (or silently assuming) the shape locally.
+    """
+    return NestShape(tasks=tuple(_classify_task(i, it)
+                                 for i, it in enumerate(p.body)))

@@ -33,6 +33,8 @@ _FNS = {
     "min": min,
     "max": max,
     "cmp": lambda a, b: float(a > b),
+    # unary: the tracing frontend emits these for softmax / decay math
+    "exp": lambda a: float(np.exp(np.float64(a))),
 }
 
 

@@ -55,7 +55,7 @@ import numpy as np
 from . import faults
 from .ilp import solve_ilp
 from .ir import (AffExpr, ArithOp, ConstOp, LoadOp, Loop, Program, StoreOp,
-                 aff, iv, normalize)
+                 aff, iv, nest_shape, normalize)
 
 
 # ---------------------------------------------------------------------------
@@ -319,16 +319,113 @@ def differential_check(p: Program, q: Program,
 
 class Normalize(Pass):
     """``ir.normalize`` (complete expansion of ``unroll``-marked loops) as a
-    pure pass.  Idempotent; the builder already normalizes, so this mostly
-    guards hand-built Programs entering the pipeline."""
+    pure pass, plus — with ``sink=True``, the default — canonicalization of
+    loop-adjacent ops: every maximal run of ops that sits beside a loop
+    (bare ops in ``Program.body``, or ops next to a sub-loop inside a loop
+    body — an imperfect nest per ``ir.nest_shape``) is sunk into a fresh
+    trip-1 *sink nest*, so downstream layers meet ops only at innermost
+    loop bodies.  A run whose SSA results are consumed outside the run
+    cannot be sunk (a loop body opens a fresh value scope) and is left in
+    place; ``nest_shape`` then still reports the task as imperfect.
+    Idempotent; the builder already normalizes unrolls, so this mostly
+    guards hand-built and frontend-traced Programs entering the pipeline."""
 
-    name = "normalize"
     tag = "normalize"
 
+    def __init__(self, sink: bool = True):
+        self.sink = bool(sink)
+        self.name = "normalize" if self.sink else "normalize(nosink)"
+
+    def params(self) -> dict:
+        return {} if self.sink else {"sink": False}
+
+    @classmethod
+    def build(cls, params: dict) -> "Normalize":
+        p = dict(params)
+        kw: dict = {}
+        if "sink" in p:
+            kw["sink"] = _param_scalar(p.pop("sink"), bool, "normalize sink")
+        if p:
+            raise TransformError(
+                f"normalize: unknown parameter(s) {sorted(p)} (valid: sink)")
+        return cls(**kw)
+
+    @staticmethod
+    def _op_uses(op) -> list[str]:
+        if isinstance(op, ArithOp):
+            return list(op.args)
+        if isinstance(op, StoreOp):
+            return [op.value]
+        return []
+
+    def _sink_runs(self, p: Program) -> bool:
+        """Sink loop-adjacent op runs into trip-1 nests in place; returns
+        whether anything changed."""
+        uses: dict[str, int] = {}
+        for node, _ in p.walk():
+            if not isinstance(node, Loop):
+                for a in self._op_uses(node):
+                    uses[a] = uses.get(a, 0) + 1
+        taken = {l.ivname for l in p.loops()}
+        fresh_ids = itertools.count()
+
+        def fresh() -> str:
+            while True:
+                nm = f"sink{next(fresh_ids)}"
+                if nm not in taken:
+                    taken.add(nm)
+                    return nm
+
+        changed = False
+
+        def rework(items: list, top: bool) -> list:
+            nonlocal changed
+            if not top and not any(isinstance(it, Loop) for it in items):
+                return items  # innermost body: nothing is loop-adjacent
+            out: list = []
+            run: list = []
+
+            def close():
+                nonlocal changed
+                if not run:
+                    return
+                defs = {op.result for op in run
+                        if getattr(op, "result", None) is not None}
+                inrun: dict[str, int] = {}
+                for op in run:
+                    for a in self._op_uses(op):
+                        inrun[a] = inrun.get(a, 0) + 1
+                if any(uses.get(d, 0) != inrun.get(d, 0) for d in defs):
+                    out.extend(run)  # results escape the run: cannot sink
+                else:
+                    nest = Loop(ivname=fresh(), lb=0, ub=1)
+                    nest.body = list(run)
+                    out.append(nest)
+                    changed = True
+                run.clear()
+
+            for it in items:
+                if isinstance(it, Loop):
+                    close()
+                    it.body = rework(it.body, False)
+                    out.append(it)
+                else:
+                    run.append(it)
+            close()
+            return out
+
+        p.body = rework(p.body, True)
+        return changed
+
     def apply(self, p: Program) -> Program:
-        if not any(l.unroll for l in p.loops()):
-            return p
-        return normalize(clone_program(p))
+        q = clone_program(p)
+        any_change = False
+        if any(l.unroll for l in q.loops()):
+            q = normalize(q)
+            any_change = True
+        if self.sink and self._sink_runs(q):
+            any_change = True
+        return q if any_change else p
 
 
 # ---------------------------------------------------------------------------
@@ -614,7 +711,11 @@ class ArrayPartition(Pass):
 
 
 def _perfect_chain(item) -> Optional[tuple[list[Loop], list]]:
-    """(loops outermost-first, innermost body) for a perfect nest, else None."""
+    """(loops outermost-first, innermost body) for a perfect nest, else None.
+
+    Structural companion to ``ir.nest_shape``: returns None exactly for the
+    tasks the classifier reports as non-``perfect`` (fusion consults the
+    classifier first and uses this helper only to extract the chain)."""
     if not isinstance(item, Loop):
         return None
     loops = [item]
@@ -1029,9 +1130,16 @@ class FuseProducerConsumer(Pass):
         log: list[dict] = list(getattr(q, "_fusion_log", []))
         while changed and (self.max_fusions is None or fused < self.max_fusions):
             changed = False
+            # one contract check, one place: only tasks the classifier calls
+            # perfect are fusion candidates — imperfect / multi-loop tasks
+            # elsewhere in the program never block fusing a legal pair
+            shape = nest_shape(q)
             for i in range(len(q.body) - 1):
                 a, b = q.body[i], q.body[i + 1]
                 if not (isinstance(a, Loop) and isinstance(b, Loop)):
+                    continue
+                if not (shape.task(i).is_perfect and
+                        shape.task(i + 1).is_perfect):
                     continue
                 if a.uid in peeled or b.uid in peeled:
                     continue

@@ -37,7 +37,7 @@ from repro.core.transforms import (ArrayPartition, FuseProducerConsumer,
 def _random_pass(rng):
     k = rng.integers(0, 7)
     if k == 0:
-        return Normalize()
+        return Normalize() if rng.integers(0, 2) else Normalize(sink=False)
     if k == 1:
         return ToSPSC()
     if k == 2:
@@ -106,6 +106,11 @@ _GOLDEN_ERRORS = [
      "tile, unroll)\n  at position 0:"),
     ("fuse{shift=banana}",
      "fuse shift: expected bool, got 'banana'\n  at position 0:"),
+    ("normalize{sink=banana}",
+     "normalize sink: expected bool, got 'banana'\n  at position 0:"),
+    ("normalize{sank=true}",
+     "normalize: unknown parameter(s) ['sank'] (valid: sink)\n"
+     "  at position 0:"),
     ("unroll{ivs=i,j}",
      "unroll requires factor=<int>\n  at position 0:"),
     ("tile{8,8}",
@@ -389,17 +394,41 @@ def test_frontier_dominates_greedy_winner_full(name):
 # ---------------------------------------------------------------------------
 
 
-def test_deprecated_shims_warn_exactly_once_per_access():
+def _access_explore():
     import repro.core
-    for name in ("explore", "compile_program"):
-        with warnings.catch_warnings(record=True) as w:
-            warnings.simplefilter("always")
-            getattr(repro.core, name)
-        dep = [x for x in w if issubclass(x.category, DeprecationWarning)]
-        assert len(dep) == 1, (name, [str(x.message) for x in w])
-        assert name in str(dep[0].message)
-        assert "hls.compile" in str(dep[0].message)
-    # the blessed path must NOT warn
+    return repro.core.explore
+
+
+def _access_compile_program():
+    import repro.core
+    return repro.core.compile_program
+
+
+def _access_stencil_dse_config():
+    from repro.kernels.stencil_pipeline import stencil_dse_config
+    return stencil_dse_config(3, 8)
+
+
+@pytest.mark.parametrize("name,access,blessed", [
+    ("explore", _access_explore, "hls.compile"),
+    ("compile_program", _access_compile_program, "hls.compile"),
+    ("stencil_dse_config", _access_stencil_dse_config, "emit_pallas"),
+], ids=["explore", "compile_program", "stencil_dse_config"])
+def test_deprecated_shim_warns_exactly_once_per_access(name, access, blessed):
+    """Every deprecated shim emits exactly one DeprecationWarning per
+    access, names itself, and points at the blessed replacement."""
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        access()
+    dep = [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert len(dep) == 1, (name, [str(x.message) for x in w])
+    assert name in str(dep[0].message)
+    assert blessed in str(dep[0].message)
+    assert "MIGRATION" in str(dep[0].message)
+
+
+def test_blessed_path_does_not_warn():
+    import repro.core
     with warnings.catch_warnings(record=True) as w:
         warnings.simplefilter("always")
         hls.compile(two_mm(4), pipeline=())

@@ -16,7 +16,7 @@ def test_unknown_suite_is_hard_error(capsys):
 
 def test_suites_cover_known_sections():
     for s in ("paper", "dse", "pareto", "dse-perf", "faults", "fusion",
-              "codegen", "kernels"):
+              "codegen", "trace", "kernels"):
         assert s in SUITES
 
 

@@ -47,8 +47,9 @@ def _exact(kernel, p, seed=0):
 _CORPUS = {**{k: v for k, v in BENCHMARKS.items()},
            **CHAIN_BENCHMARKS, "fig1_conv_chain": fig1_conv_chain}
 _CORPUS_N = {"optical_flow": 6, "two_mm": 6}
-# structurally rejected: two_mm's reduction nests are 3-deep
-_EXPECTED_UNLOWERABLE = {"two_mm"}
+# nothing in the corpus is structurally rejected anymore: two_mm's 3-deep
+# canonical accumulations now lower in Mode B via a fori_loop left fold
+_EXPECTED_UNLOWERABLE: set = set()
 
 
 @pytest.mark.parametrize("name", sorted(_CORPUS))
@@ -253,14 +254,16 @@ def test_emit_pallas_unlowerable_records_diagnostic():
     AND records a codegen-unlowerable diagnostic on the result."""
     from repro.core import CompileError
 
-    p = two_mm(6, storage="bram")
+    p = fig3_conv1d()
     r = _compile_small(p)
-    with pytest.raises(UnlowerableProgram, match="two_mm") as ei:
+    with pytest.raises(UnlowerableProgram, match="non-separable") as ei:
         r.emit_pallas()
     assert isinstance(ei.value, CompileError)
     assert ei.value.reasons
+    assert [v.code for v in ei.value.violations] == ["non-separable"]
     ds = [d for d in r.diagnostics if d.get("kind") == "codegen-unlowerable"]
-    assert ds and ds[0]["program"] == "two_mm" and ds[0]["reasons"]
+    assert (ds and ds[0]["program"] == "fig3_conv1d" and ds[0]["reasons"]
+            and ds[0]["codes"] == ["non-separable"])
 
 
 def test_unlowerable_reduction_reason():

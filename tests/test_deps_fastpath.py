@@ -113,3 +113,76 @@ def _random_affine_program(seed: int):
 def test_random_affine_fastpath_matches_ilp(seed):
     p = _random_affine_program(seed)
     _differential(p)
+
+
+# ---------------------------------------------------------------------------
+# randomized imperfect / multi-loop tasks (the generalized nest contract):
+# loop-adjacent ops and scan-style recurrences must hit the same closed forms
+# ---------------------------------------------------------------------------
+
+
+def _random_imperfect_program(seed: int):
+    """Outer loop holding a loose scalar prologue (load+arith) feeding an
+    inner nest — the shape ``ir.nest_shape`` classifies as ``imperfect``."""
+    from repro.core.ir import ProgramBuilder
+
+    rng = np.random.default_rng(7000 + seed)
+    T, N = int(rng.integers(3, 6)), int(rng.integers(3, 6))
+    b = ProgramBuilder(f"imp{seed}")
+    b.array("X", (T + 1, N + 2), partition=(0,), ports=("w", "r", "r"))
+    b.array("Y", (T + 1, N + 2), partition=(0,), ports=("w", "r", "r"))
+    with b.loop("t", 0, T) as t:
+        m = b.load("X", t, int(rng.integers(0, N)))
+        if rng.integers(0, 2):
+            m = b.mul(m, b.const(float(rng.integers(1, 4))))
+        with b.loop("j", 0, N) as j:
+            v = b.add(b.load("X", t + int(rng.integers(0, 2)), j), m)
+            b.store("Y", v, t + int(rng.integers(0, 2)), j)
+        if rng.integers(0, 2):  # loose epilogue store after the nest
+            b.store("Y", m, t, N + 1)
+    return b.build()
+
+
+def _random_multiloop_program(seed: int):
+    """Scan-style task: a time loop whose body holds 2-3 sibling inner
+    nests coupled through a carried state array (``multi_loop`` kind)."""
+    from repro.core.ir import ProgramBuilder
+
+    rng = np.random.default_rng(8000 + seed)
+    T, N = int(rng.integers(3, 5)), int(rng.integers(3, 6))
+    b = ProgramBuilder(f"ml{seed}")
+    b.array("S", (T + 1, N), partition=(0,), ports=("w", "r", "r"))
+    b.array("X", (T, N), partition=(0,), ports=("w", "r", "r"))
+    b.array("Y", (T, N), partition=(0,), ports=("w", "r", "r"))
+    with b.loop("j0", 0, N) as j:
+        b.store("S", b.load("X", 0, j), 0, j)
+    with b.loop("t", 0, T) as t:
+        with b.loop("j1", 0, N) as j:
+            up = b.arith(["add", "mul"][int(rng.integers(0, 2))],
+                         b.load("S", t, j), b.load("X", t, j))
+            b.store("S", up, t + 1, j)
+        with b.loop("j2", 0, N) as j:
+            rd = t + 1 if rng.integers(0, 2) else t
+            b.store("Y", b.mul(b.load("S", rd, j), b.load("X", t, j)), t, j)
+        if rng.integers(0, 2):  # third sibling nest reading the output back
+            with b.loop("j3", 0, N) as j:
+                b.store("Y", b.add(b.load("Y", t, j), b.const(1.0)), t, j)
+    return b.build()
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_random_imperfect_fastpath_matches_ilp(seed):
+    from repro.core.ir import nest_shape
+
+    p = _random_imperfect_program(seed)
+    assert nest_shape(p).kinds == ("imperfect",)
+    _differential(p)
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_random_multiloop_fastpath_matches_ilp(seed):
+    from repro.core.ir import nest_shape
+
+    p = _random_multiloop_program(seed)
+    assert "multi_loop" in nest_shape(p).kinds
+    _differential(p)

@@ -359,6 +359,31 @@ def test_explain_reports_diagnostics():
     assert "solver-degraded" in text or "fusion-hazard-degraded" in text
 
 
+def _generalized_shape_corpus():
+    """Imperfect and scan-style multi-loop tasks (the generalized nest
+    contract) — the chaos acceptance property must hold beyond perfect
+    nests."""
+    from test_deps_fastpath import (_random_imperfect_program,
+                                    _random_multiloop_program)
+
+    return [("imperfect", lambda: _random_imperfect_program(3)),
+            ("multi_loop", lambda: _random_multiloop_program(3))]
+
+
+@pytest.mark.parametrize("kind,mk", _generalized_shape_corpus(),
+                         ids=lambda v: v if isinstance(v, str) else "")
+def test_chaos_identical_or_labeled_generalized_shapes(kind, mk):
+    clean = hls.compile(mk(), search=_search())
+    assert clean.provenance == "exact"
+    ref = _frontier_sig(clean)
+    for plan in _CHAOS_PLANS:
+        r = _chaos_once(mk, plan)
+        if _frontier_sig(r) != ref:
+            assert r.degraded, (kind, plan)
+            for c in r.frontier:
+                assert c.schedule.feasible
+
+
 @pytest.mark.slow
 @pytest.mark.timeout(1800)
 @pytest.mark.parametrize("name", sorted(CHAIN_BENCHMARKS))
@@ -372,3 +397,21 @@ def test_chaos_sweep_chain_benchmarks(name):
             r = _chaos_once(mk, plan)
             if _frontier_sig(r) != ref:
                 assert r.degraded, (name, plan)
+
+
+@pytest.mark.slow
+@pytest.mark.timeout(1800)
+@pytest.mark.parametrize("seed", range(4))
+def test_chaos_sweep_generalized_shapes(seed):
+    from test_deps_fastpath import (_random_imperfect_program,
+                                    _random_multiloop_program)
+
+    for mk_seeded in (_random_imperfect_program, _random_multiloop_program):
+        mk = lambda: mk_seeded(seed)  # noqa: E731
+        clean = hls.compile(mk(), search=_search())
+        ref = _frontier_sig(clean)
+        for plan in (dict(seed=seed, solver_timeout=0.3),
+                     dict(seed=seed, solver_timeout=0.7, cache_corrupt=0.5)):
+            r = _chaos_once(mk, plan)
+            if _frontier_sig(r) != ref:
+                assert r.degraded, (mk_seeded.__name__, plan)

@@ -1,0 +1,121 @@
+"""Tracing frontend (DESIGN.md §11): jaxpr -> Program IR, differentially
+validated against the source kernel, and searchable by the DSE.
+
+The three bundled traced kernels are the acceptance gate for the
+generalized loop-nest contract: the wkv6 scan traces to a ``multi_loop``
+task (time loop carrying a 2-D state), and all three must both match their
+source function bit-tightly under ``sequential_exec`` and yield a
+multi-point Pareto frontier from ``hls.compile``.
+"""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import hls  # noqa: E402
+from repro.core import frontend  # noqa: E402
+from repro.core.errors import UntraceableFunction  # noqa: E402
+from repro.core.frontend import (TracedProgram, attention_program,  # noqa: E402
+                                 conv_block_program, trace, wkv6_program)
+from repro.core.ir import nest_shape  # noqa: E402
+
+TRACED = {
+    "wkv6": wkv6_program,
+    "conv_block": conv_block_program,
+    "attention": attention_program,
+}
+
+
+@pytest.fixture(scope="module")
+def traced():
+    return {name: mk() for name, mk in TRACED.items()}
+
+
+# ---------------------------------------------------------------------------
+# tracing basics
+# ---------------------------------------------------------------------------
+
+
+def test_trace_returns_traced_program(traced):
+    for name, tp in traced.items():
+        assert isinstance(tp, TracedProgram), name
+        assert tp.program.body, name
+        assert all(n in tp.program.arrays for n in tp.in_names), name
+        assert all(n in tp.program.arrays for n in tp.out_names), name
+        # inputs and outputs are visible kernel arguments
+        for n in tp.in_names + tp.out_names:
+            assert tp.program.arrays[n].is_arg, (name, n)
+
+
+def test_wkv6_traces_to_multi_loop_task(traced):
+    """The scan's time loop carries a 2-D state nest -> a multi_loop task,
+    the shape the generalized contract exists for."""
+    kinds = nest_shape(traced["wkv6"].program).kinds
+    assert "multi_loop" in kinds, kinds
+
+
+def test_conv_and_attention_trace_to_perfect_nests(traced):
+    for name in ("conv_block", "attention"):
+        sh = nest_shape(traced[name].program)
+        assert sh.all_perfect, (name, sh.kinds)
+
+
+def test_scalar_constant_folding():
+    """Pure-constant subexpressions fold at trace time, not into nests."""
+    def f(x):
+        return x * (2.0 * 3.0)
+
+    tp = trace(f, np.zeros((4,), np.float32))
+    assert tp.validate() <= 1e-12
+
+
+def test_untraceable_primitive_raises():
+    def f(x):
+        return jnp.sin(x)
+
+    with pytest.raises(UntraceableFunction, match="sin"):
+        trace(f, np.zeros((4,), np.float32))
+
+
+def test_untraceable_reshape_raises():
+    def f(x):
+        return x.reshape(2, 2)
+
+    with pytest.raises(UntraceableFunction, match="reshape"):
+        trace(f, np.zeros((4,), np.float32))
+
+
+def test_lazy_core_exports():
+    from repro.core import TracedProgram as TP2
+    from repro.core import trace as trace2
+    assert trace2 is trace and TP2 is TracedProgram
+
+
+# ---------------------------------------------------------------------------
+# differential validation: traced Program == source kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(TRACED))
+def test_traced_program_matches_source_kernel(name, traced):
+    err = traced[name].validate(seed=0, rtol=1e-12)
+    assert err <= 1e-12
+
+
+@pytest.mark.parametrize("seed", [1, 2])
+def test_wkv6_validation_across_seeds(seed, traced):
+    assert traced["wkv6"].validate(seed=seed, rtol=1e-12) <= 1e-12
+
+
+# ---------------------------------------------------------------------------
+# DSE acceptance: every traced kernel yields a multi-point frontier
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(TRACED))
+def test_traced_program_compiles_to_multipoint_frontier(name, traced):
+    res = hls.compile(traced[name].program, objectives=("latency", "bram"))
+    assert len(res.frontier) >= 2, \
+        f"{name}: single-point frontier {res.frontier}"
