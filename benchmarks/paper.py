@@ -69,7 +69,7 @@ def compute(storage: str = "reg", force: bool = False) -> dict:
         return cache[storage]
 
     from repro.core.autotune import compile_program
-    from repro.core.dataflow import (analyze_dataflow, resources, to_spsc,
+    from repro.core.dataflow import (resources, to_spsc,
                                      vitis_dataflow_latency)
     from repro.core.programs import BENCHMARKS
 
@@ -271,7 +271,7 @@ def compute_codegen(storage: str = "bram", force: bool = False) -> dict:
                        for a in kd.outputs)
         if not bitexact:
             raise RuntimeError(
-                f"codegen bench: double- and single-buffered lowerings of "
+                "codegen bench: double- and single-buffered lowerings of "
                 f"'{name}' (n={nb}) disagree bitwise")
         ref = sim.sequential_exec(p_big, inputs)
         for a in kd.outputs:
@@ -297,7 +297,7 @@ def compute_codegen(storage: str = "bram", force: bool = False) -> dict:
     wins = [n for n, rec in out.items() if rec["double_speedup"] > 1.0]
     if len(wins) < 2:
         raise RuntimeError(
-            f"codegen bench: double-buffering beats single-buffering only "
+            "codegen bench: double-buffering beats single-buffering only "
             f"on {wins} — need >= 2 chains")
     ratios = {n: rec["measured_us_double"] / max(rec["modeled_latency"], 1)
               for n, rec in out.items()}
@@ -379,8 +379,8 @@ def compute_trace(storage: str = "bram", force: bool = False) -> dict:
         if len(r.frontier) < 2:
             raise RuntimeError(
                 f"trace bench: '{name}' ({tp.program.name}) produced a "
-                f"single-point frontier — the traced IR stopped being "
-                f"DSE-searchable")
+                "single-point frontier — the traced IR stopped being "
+                "DSE-searchable")
         base = measure_candidate(tp.program, "baseline", [], verify=False)
         best = min(c.latency for c in r.frontier)
         out[name] = {
@@ -689,8 +689,8 @@ def compute_dse_perf(storage: str = "bram", force: bool = False,
                     and rec["frontier_identical_parallel"]):
                 raise RuntimeError(
                     f"dse-perf: '{name}' frontier differs across "
-                    f"cold/warm/parallel runs — the cache or the parallel "
-                    f"merge broke determinism")
+                    "cold/warm/parallel runs — the cache or the parallel "
+                    "merge broke determinism")
             if rec["warm_speedup"] < WARM_SPEEDUP_FLOOR:
                 raise RuntimeError(
                     f"dse-perf: '{name}' warm-cache speedup "
@@ -839,21 +839,21 @@ def compute_faults(storage: str = "bram", force: bool = False) -> dict:
             if clean_r.provenance != "exact":
                 raise RuntimeError(
                     f"faults: clean run of '{name}' claims degraded "
-                    f"provenance — the fault harness leaked into a "
-                    f"fault-free compile")
+                    "provenance — the fault harness leaked into a "
+                    "fault-free compile")
             if not rec["recovered_identical"] \
                     or rec["recovered_provenance"] != "exact":
                 raise RuntimeError(
                     f"faults: '{name}' recovered-fault frontier diverged "
                     f"from clean (identical={rec['recovered_identical']}, "
                     f"provenance={rec['recovered_provenance']}) — retried "
-                    f"worker faults must be invisible in the result")
+                    "worker faults must be invisible in the result")
             if not rec["degraded_identical"] \
                     and rec["degraded_provenance"] != "degraded":
                 raise RuntimeError(
                     f"faults: '{name}' degraded run diverged from the "
-                    f"clean frontier WITHOUT provenance='degraded' — "
-                    f"unlabeled divergence is unsound")
+                    "clean frontier WITHOUT provenance='degraded' — "
+                    "unlabeled divergence is unsound")
             if rec["recovery_overhead"] > RECOVERY_OVERHEAD_CEIL:
                 raise RuntimeError(
                     f"faults: '{name}' recovery overhead "
@@ -883,4 +883,91 @@ def faults_table(res: dict) -> list[tuple]:
                          or r["degraded_provenance"] == "degraded")))
         rows.append((f"{name}.hv_ratio", r["degraded_seconds"] * 1e6,
                      r["hv_ratio"]))
+    return rows
+
+
+ANALYSIS_JSON = os.path.join(os.path.dirname(__file__), os.pardir,
+                             "BENCH_analysis.json")
+
+
+def compute_analysis(storage: str = "bram", force: bool = False) -> dict:
+    """Static-verifier benchmark (DESIGN.md §12): per mismatched-bounds
+    chain, (a) lint the program and wall-clock the linter, (b) compile and
+    run the independent schedule validator on the winner, (c) fire 25
+    seeded schedule corruptions at the validator.  Gates (raise):
+
+    * the corpus lints with zero error-severity findings,
+    * every genuine winner schedule is accepted,
+    * every corrupted schedule is rejected (the mutation-kill property).
+
+    Results go to ``BENCH_analysis.json``."""
+    cache = {}
+    if os.path.exists(ANALYSIS_JSON):
+        cache = json.load(open(ANALYSIS_JSON))
+    if storage in cache and not force:
+        return cache[storage]
+
+    import numpy as np
+
+    from repro.core import hls
+    from repro.core.analysis import corrupt_schedule, lint, validate_static
+    from repro.core.programs import CHAIN_BENCHMARKS
+
+    out = {}
+    for name, mk in CHAIN_BENCHMARKS.items():
+        n = _PARETO_SIZES.get(name, 8)
+        p = mk(n=n)
+        t0 = time.time()
+        diags = lint(p)
+        lint_s = time.time() - t0
+        errors = [d for d in diags if d.severity == "error"]
+        if errors:
+            raise AssertionError(
+                f"{name}: lint errors {[str(d) for d in errors]}")
+        r = hls.compile(p, pipeline=())
+        s = r.best.schedule
+        t0 = time.time()
+        v = validate_static(s.program, s)
+        val_s = time.time() - t0
+        if not v.ok:
+            raise AssertionError(
+                f"{name}: golden schedule rejected: "
+                f"{[str(d) for d in v.diagnostics]}")
+        rng = np.random.default_rng(20260807)
+        killed = tries = 0
+        t0 = time.time()
+        while killed < 25 and tries < 250:
+            tries += 1
+            made = corrupt_schedule(s, rng)
+            if made is None:
+                continue
+            mut, info = made
+            if validate_static(mut.program, mut, fail_fast=True).ok:
+                raise AssertionError(f"{name}: validator accepted "
+                                     f"corrupted schedule {info}")
+            killed += 1
+        mut_s = time.time() - t0
+        out[name] = {
+            "lint_findings": len(diags), "lint_seconds": lint_s,
+            "pairs": v.pairs, "cases": v.cases, "ilp_calls": v.ilp_calls,
+            "validate_seconds": val_s,
+            "mutants_killed": killed, "mutation_seconds": mut_s,
+        }
+
+    cache[storage] = out
+    json.dump(cache, open(ANALYSIS_JSON, "w"), indent=1)
+    return out
+
+
+def analysis_table(res: dict) -> list[tuple]:
+    """Linter/validator wall-clock + mutation-kill rate, per chain."""
+    rows = []
+    for name, r in res.items():
+        rows.append((f"{name}.lint", r["lint_seconds"] * 1e6,
+                     f"findings={r['lint_findings']}"))
+        rows.append((f"{name}.validate", r["validate_seconds"] * 1e6,
+                     f"pairs={r['pairs']};cases={r['cases']};"
+                     f"ilp={r['ilp_calls']}"))
+        rows.append((f"{name}.mutation_kill", r["mutation_seconds"] * 1e6,
+                     f"{r['mutants_killed']}/{r['mutants_killed']}"))
     return rows

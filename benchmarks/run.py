@@ -11,7 +11,8 @@ import argparse
 
 #: every runnable suite — argparse rejects anything else
 SUITES = ("paper", "reg", "bram", "dse", "pareto", "dse-perf", "faults",
-          "fusion", "codegen", "trace", "pipeline", "kernels", "roofline")
+          "fusion", "codegen", "trace", "analysis", "pipeline", "kernels",
+          "roofline")
 
 
 def _emit(rows):
@@ -32,22 +33,22 @@ def main(argv=None) -> None:
         if only and only not in ("paper", storage):
             continue
         res = paper.compute(storage=storage)
-        print(f"# === paper Fig.7 — multi-dim pipelining vs loop-only "
+        print("# === paper Fig.7 — multi-dim pipelining vs loop-only "
               f"[{storage}] (paper band: 1.7-3.7x, avg 2.42x) ===")
         rows = paper.fig7(res)
         _emit([(f"fig7.{storage}.{n}", us, d) for n, us, d in rows])
         avg = sum(d for _, _, d in rows) / len(rows)
         print(f"fig7.{storage}.average,0.0,{avg:.3f}")
 
-        print(f"# === paper Fig.8 — vs Vitis-dataflow model on SPSC variants "
+        print("# === paper Fig.8 — vs Vitis-dataflow model on SPSC variants "
               f"[{storage}] (paper: ours avg 1.30x over dataflow) ===")
         _emit([(f"fig8.{storage}.{n}", us, d) for n, us, d in paper.fig8(res)])
 
-        print(f"# === paper Fig.9 — resource model relative to Vitis-seq "
+        print("# === paper Fig.9 — resource model relative to Vitis-seq "
               f"[{storage}] ===")
         _emit([(f"fig9.{storage}.{n}", us, d) for n, us, d in paper.fig9(res)])
 
-        print(f"# === paper Fig.10 — unmodified non-SPSC workloads "
+        print("# === paper Fig.10 — unmodified non-SPSC workloads "
               f"[{storage}] (paper band: 2-2.9x) ===")
         _emit([(f"fig10.{storage}.{n}", us, d) for n, us, d in paper.fig10(res)])
 
@@ -122,6 +123,17 @@ def main(argv=None) -> None:
         # when a traced frontier collapses to a single point)
         res = paper.compute_trace(storage="bram", force=True)
         _emit([(f"trace.bram.{n}", us, d) for n, us, d in paper.trace_table(res)])
+
+    if only in (None, "analysis"):
+        print("# === static verifier — linter + independent schedule "
+              "validation wall-clock, and the mutation-kill gate "
+              "(DESIGN.md §12) ===")
+        # always re-run: this section IS the verifier acceptance gate (it
+        # raises on any corpus lint error, any rejected genuine schedule,
+        # or any accepted corrupted schedule)
+        res = paper.compute_analysis(storage="bram", force=True)
+        _emit([(f"analysis.bram.{n}", us, d)
+               for n, us, d in paper.analysis_table(res)])
 
     if only in (None, "pipeline"):
         try:

@@ -14,9 +14,11 @@ from .ir import (AffExpr, ArrayDecl, ArithOp, ConstOp, LoadOp, Loop, Program,
                  ProgramBuilder, StoreOp, aff, iv, normalize)
 from .ilp import solve_ilp, solve_lp, brute_force_ilp
 from . import faults
-from .errors import (CacheFault, CompileError, NestContractViolation,
-                     ScheduleInfeasible, SolverTruncated, UnlowerableProgram,
-                     UntraceableFunction, WorkerFault)
+from .errors import (CacheFault, CompileError, Diagnostic,
+                     NestContractViolation, ScheduleInfeasible,
+                     SolverTruncated, StaticValidationError,
+                     UnlowerableProgram, UntraceableFunction, WorkerFault)
+from .analysis import Verdict, lint, validate_static
 from .codegen import PallasKernel, lower_program
 from .deps import DepAnalysis, DepEdge
 from .scheduler import Schedule, schedule, feasible, emit_hir
@@ -54,7 +56,8 @@ __all__ = [
     "Constraint", "constraint", "minimize", "SearchConfig", "DesignPoint",
     "faults", "CompileError", "ScheduleInfeasible", "SolverTruncated",
     "WorkerFault", "CacheFault", "UnlowerableProgram", "UntraceableFunction",
-    "NestContractViolation",
+    "NestContractViolation", "Diagnostic", "StaticValidationError",
+    "Verdict", "lint", "validate_static",
     "PallasKernel", "lower_program",
     # tracing frontend, served lazily (importing it pulls in jax):
     "trace", "TracedProgram",

@@ -43,10 +43,10 @@ from typing import Optional, Sequence, Union
 
 from . import faults
 from .autotune import (DSECandidate, DSEResult, MOVE_FAMILIES,
-                       PARETO_METRICS, ParetoResult, _degrading, dominates,
-                       measure_candidate, pareto_explore, validate_candidate)
-from .errors import (CacheFault, CompileError, ScheduleInfeasible,
-                     SolverTruncated, WorkerFault)
+                       PARETO_METRICS, ParetoResult, _degrading,
+                       dedupe_diagnostics, measure_candidate,
+                       pareto_explore, validate_candidate)
+from .errors import StaticValidationError
 from .ir import Program
 from .pipeline_parse import parse_pipeline, print_pipeline
 from .transforms import Pass
@@ -193,7 +193,17 @@ class SearchConfig:
     candidate — a hung worker past the deadline is retried then
     quarantined instead of stalling the wave (DESIGN.md §9).  Like
     ``jobs`` it does not change results, only how faults are survived,
-    so it is excluded from the frontier cache key."""
+    so it is excluded from the frontier cache key.
+
+    ``lint`` runs the whole-program IR linter (``analysis.lint``) as a
+    pre-pass, feeding findings into ``CompileResult.diagnostics`` (kind
+    ``"lint"``); ``static_check`` runs the independent schedule
+    translation validator (``analysis.validate_static``, DESIGN.md §12)
+    on the frontier winner — a proven violation raises
+    :class:`~repro.core.errors.StaticValidationError`.  Both default on;
+    degraded-provenance schedules are validated even when
+    ``static_check`` is opted out (their conservative edge bounds are
+    exactly where an unnoticed miscompile would hide)."""
 
     moves: tuple[str, ...] = MOVE_FAMILIES
     unroll_factors: tuple[int, ...] = (2, 4)
@@ -207,6 +217,8 @@ class SearchConfig:
     jobs: int = 1
     cache: bool = True
     worker_deadline_s: Optional[float] = 60.0
+    lint: bool = True
+    static_check: bool = True
 
 
 @dataclass(frozen=True)
@@ -329,7 +341,7 @@ class CompileResult:
 
     def explain(self) -> str:
         """Per-candidate accept/reject reasons, frontier first."""
-        lines = [f"objectives: " + ", ".join(
+        lines = ["objectives: " + ", ".join(
             f"minimize({o.metric})" +
             (f"*{o.weight:g}" if o.weight != 1.0 else "")
             for o in self.spec.objectives)]
@@ -360,13 +372,24 @@ class CompileResult:
             lines.append(
                 f"diagnostics ({'degraded' if self.degraded else 'exact'}): "
                 + ", ".join(f"{k} x{n}" for k, n in sorted(counts.items())))
+            degr = [d for d in self.diagnostics
+                    if d.get("kind") == "solver-degraded"]
+            # stable order regardless of which DSE candidate surfaced the
+            # gap first: sort by the (src, snk, carry) site, not insertion
+            for d in sorted(degr, key=lambda d: (d.get("src") or -1,
+                                                 d.get("snk") or -1,
+                                                 d.get("carry")
+                                                 if d.get("carry") is not None
+                                                 else -1)):
+                lines.append(
+                    f"  solver gap on ({d.get('src')}, {d.get('snk')}) "
+                    f"carry={d.get('carry')}: bound={d.get('slack_bound')}"
+                    + (f" gap={d['gap']:g}" if d.get("gap") is not None
+                       else ""))
             for d in self.diagnostics:
-                if d.get("kind") == "solver-degraded":
-                    lines.append(
-                        f"  solver gap on ({d.get('src')}, {d.get('snk')}) "
-                        f"carry={d.get('carry')}: bound={d.get('slack_bound')}"
-                        + (f" gap={d['gap']:g}" if d.get("gap") is not None
-                           else ""))
+                if d.get("kind") == "lint" and d.get("severity") == "error":
+                    lines.append(f"  lint[{d.get('code')}] "
+                                 f"{d.get('where')}: {d.get('detail')}")
         return "\n".join(lines)
 
 
@@ -390,6 +413,34 @@ def _select_best(frontier: Sequence[DesignPoint], baseline: DesignPoint,
         return min(frontier, key=lambda c: (score(c), c.objectives()))
     order = metrics + [m for m in PARETO_METRICS if m not in metrics]
     return min(frontier, key=lambda c: tuple(c.metric(m) for m in order))
+
+
+def _lint_diagnostics(program: Program) -> list[dict]:
+    """The lint pre-pass: whole-program findings as diagnostic dicts."""
+    from . import analysis
+    return [d.as_dict(kind="lint") for d in analysis.lint(program)]
+
+
+def _static_check(point, diagnostics: list[dict]) -> None:
+    """Post-pass: independently validate the winning schedule (DESIGN.md
+    §12).  A *proven* violation raises :class:`StaticValidationError` — it
+    means a miscompile, never something to report-and-continue.  Truncated
+    emptiness checks (e.g. under injected solver faults) cannot prove
+    safety either way; they degrade the result via a
+    ``"validate-unresolved"`` diagnostic instead of raising."""
+    s = getattr(point, "schedule", None)
+    if s is None or not getattr(s, "feasible", True):
+        return
+    from . import analysis
+    v = analysis.validate_static(s.program, s)
+    if v.violations:
+        raise StaticValidationError(s.program.name, v)
+    if v.unresolved:
+        diagnostics.append({
+            "kind": "validate-unresolved", "program": s.program.name,
+            "count": v.unresolved,
+            "detail": f"{v.unresolved} of {v.cases} dependence cases "
+                      "truncated; schedule safety not independently proven"})
 
 
 def _resolve_spec(spec: Optional[CompileSpec], overrides: dict) -> CompileSpec:
@@ -488,6 +539,12 @@ def compile(program: Program, spec: Optional[CompileSpec] = None, *,
         repaired = (store.repairs - repairs0) if store is not None else 0
         if repaired:
             diagnostics.append({"kind": "cache-repair", "count": repaired})
+        diagnostics = dedupe_diagnostics(diagnostics)
+        if sc.lint:
+            diagnostics[:0] = _lint_diagnostics(program)
+        if sc.static_check or \
+                getattr(point, "provenance", "exact") != "exact":
+            _static_check(point, diagnostics)
         degraded = any(getattr(c, "provenance", "exact") != "exact"
                        for c in candidates) or _degrading(diagnostics)
         return CompileResult(program=program, spec=spec, baseline=baseline,
@@ -508,11 +565,20 @@ def compile(program: Program, spec: Optional[CompileSpec] = None, *,
     best = _select_best(r.frontier, r.baseline, spec)
     if sc.validate:
         validate_candidate(best, sc.seeds)
+    diagnostics = list(r.diagnostics)
+    if sc.lint:
+        diagnostics[:0] = _lint_diagnostics(program)
+    if sc.static_check or \
+            getattr(best, "provenance", "exact") != "exact" \
+            or r.provenance != "exact":
+        _static_check(best, diagnostics)
+    degraded = r.provenance != "exact" or _degrading(diagnostics)
     return CompileResult(program=program, spec=spec, baseline=r.baseline,
                          best=best, frontier=r.frontier,
                          candidates=r.candidates, rejected=r.rejected,
                          caps=r.caps, compiles=r.compiles,
-                         diagnostics=r.diagnostics, provenance=r.provenance)
+                         diagnostics=diagnostics,
+                         provenance="degraded" if degraded else "exact")
 
 
 # ---------------------------------------------------------------------------

@@ -324,6 +324,30 @@ def _degrading(events: Sequence[dict]) -> bool:
     return any(e.get("kind") in faults.DEGRADING_KINDS for e in events)
 
 
+def dedupe_diagnostics(entries: Sequence[dict]) -> list[dict]:
+    """Collapse repeated identical diagnostics across DSE candidates.
+
+    Two entries are "identical" when every field except the reporting
+    ``candidate`` (and any prior ``count``) matches — e.g. the same solver
+    gap on the same (src, snk, carry) site resurfacing in every candidate
+    that re-analyzes the nest.  The first occurrence is kept (stable
+    order) and gains a ``count`` when it swallowed duplicates, so
+    ``explain()`` and machine consumers see each distinct fact once."""
+    out: list[dict] = []
+    index: dict[tuple, int] = {}
+    for e in entries:
+        key = tuple(sorted((k, repr(v)) for k, v in e.items()
+                           if k not in ("candidate", "count")))
+        i = index.get(key)
+        if i is None:
+            index[key] = len(out)
+            out.append(dict(e))
+        else:
+            out[i]["count"] = (out[i].get("count") or 1) + \
+                (e.get("count") or 1)
+    return out
+
+
 def _store_candidate(store: Optional[CacheStore], key: Optional[str],
                      c: Optional[DSECandidate], verify: bool) -> None:
     if store is None or key is None:
@@ -1125,6 +1149,7 @@ def pareto_explore(p: Program, *,
     if store is not None and store.repairs > repairs0:
         diagnostics.append({"kind": "cache-repair",
                             "count": store.repairs - repairs0})
+    diagnostics = dedupe_diagnostics(diagnostics)
     degraded = (any(c.provenance != "exact" for c in candidates)
                 or _degrading(diagnostics))
     result = ParetoResult(baseline=baseline, frontier=frontier,

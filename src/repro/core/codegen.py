@@ -372,7 +372,7 @@ def _plan_streamed(p: Program, nests: list[_Nest],
              if not any(acc.array == s.out
                         for t in stages for _, acc in t.nest.loads)]
     if len(sinks) != 1:
-        soft.append(f"streamed mode needs a unique sink stage "
+        soft.append("streamed mode needs a unique sink stage "
                     f"({len(sinks)} found: {[s.out for s in sinks]})")
         return None, soft
     sink = sinks[0]
@@ -898,8 +898,18 @@ def lower_program(p: Program, *, block_rows: Optional[int] = None,
     whole-array otherwise); raises :class:`UnlowerableProgram` when the
     program is outside both contracts."""
     if buffering not in ("double", "single"):
-        raise ValueError(f"buffering must be 'double' or 'single', "
+        raise ValueError("buffering must be 'double' or 'single', "
                          f"got {buffering!r}")
+    # A program whose affine accesses can leave their arrays has no faithful
+    # kernel — jnp indexing clamps silently, hiding the bug.  The linter
+    # proves the bounds (or the violation) statically; other lint findings
+    # stay warnings, but OOB is a hard refusal here.
+    from .analysis import lint as _lint
+    oob = [d for d in _lint(p) if d.code in ("oob-read", "oob-write")]
+    if oob:
+        raise UnlowerableProgram(p.name, [
+            NestContractViolation(d.code, "codegen",
+                                  f"{d.where}: {d.detail}") for d in oob])
     nests, hard = _extract_nests(p)
     if hard:
         raise UnlowerableProgram(p.name, hard)

@@ -10,6 +10,8 @@ or the caller asked for strictness.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
+
 
 class CompileError(Exception):
     """Base class for all structured compilation failures."""
@@ -56,6 +58,61 @@ class NestContractViolation(CompileError):
     def as_diagnostic(self) -> dict:
         return {"kind": f"{self.where}-rejection", "code": self.code,
                 "detail": self.detail}
+
+
+@dataclass(frozen=True)
+class Diagnostic:
+    """One structured static-analysis finding (DESIGN.md §12).
+
+    The same shape as :meth:`NestContractViolation.as_diagnostic` — a
+    machine-readable ``code`` (the vocabulary is ``analysis.LINT_CODES`` /
+    ``analysis.VALIDATE_CODES``), the program location that triggered it
+    (``where``, e.g. ``"harris/Ix[load uid=12]"``), a ``severity`` of
+    ``"error"`` (the program or schedule is wrong) or ``"warning"``
+    (suspicious but executable), and a human-readable ``detail``.
+
+    Unlike :class:`NestContractViolation` a Diagnostic is a *value*, not an
+    exception: linting never aborts compilation, it reports through
+    ``CompileResult.diagnostics``.
+    """
+
+    code: str
+    where: str
+    severity: str  # "error" | "warning"
+    detail: str
+
+    def sort_key(self) -> tuple:
+        """Stable severity-first ordering (errors before warnings)."""
+        return (0 if self.severity == "error" else 1,
+                self.code, self.where, self.detail)
+
+    def as_dict(self, kind: str = "lint") -> dict:
+        return {"kind": kind, "code": self.code, "severity": self.severity,
+                "where": self.where, "detail": self.detail}
+
+    def __str__(self) -> str:
+        return f"{self.severity}[{self.code}] {self.where}: {self.detail}"
+
+
+class StaticValidationError(CompileError):
+    """The independent static validator (``repro.core.analysis``) proved a
+    schedule violates the dependence/port/occupancy contract.
+
+    This means a *miscompile*: the (II, theta) assignment the scheduler
+    produced lets a conflicting dynamic-instance pair execute closer than
+    its required delay.  Carries the full :class:`~repro.core.analysis.
+    Verdict` so callers can inspect every violation witness.
+    """
+
+    def __init__(self, program_name: str, verdict):
+        self.program_name = str(program_name)
+        self.verdict = verdict
+        probs = [d for d in verdict.diagnostics if d.severity == "error"]
+        head = "; ".join(str(d) for d in probs[:3])
+        more = f" (+{len(probs) - 3} more)" if len(probs) > 3 else ""
+        super().__init__(
+            f"schedule for '{self.program_name}' fails static validation: "
+            f"{head}{more}")
 
 
 class UntraceableFunction(CompileError):

@@ -38,6 +38,9 @@ DEGRADING_KINDS = frozenset({
     "dep-distance-degraded",
     "worker-quarantine",
     "compile-error",
+    # the static validator could not *prove* the winner safe (truncated
+    # emptiness checks, e.g. under injected solver deadlines)
+    "validate-unresolved",
 })
 
 

@@ -527,6 +527,15 @@ class TracedProgram:
                     f"kernel on '{name}': max rel err {err:.3e} > {rtol:g}")
         return worst
 
+    def lint(self):
+        """Static findings on the traced IR (``analysis.lint``) — catches
+        what :meth:`validate` cannot: accesses that only leave their array
+        on inputs the differential seed never exercises, dead stores the
+        simulator silently performs, and multi-writer hazards masked by
+        sequential execution order."""
+        from .analysis import lint
+        return lint(self.program)
+
 
 def trace(fn: Callable, *example_args, name: Optional[str] = None,
           in_names: Optional[Sequence[str]] = None,

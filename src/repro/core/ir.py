@@ -16,7 +16,7 @@ loads/stores 1 cycle (§3.1 / Fig. 3).
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, field
 from typing import Optional, Union
 
 # ---------------------------------------------------------------------------
@@ -82,6 +82,18 @@ class AffExpr:
 
     def eval(self, env: dict[str, int]) -> int:
         return self.const + sum(c * env[n] for n, c in self.coeffs.items())
+
+    def interval(self, bounds: dict[str, tuple[int, int]]) -> tuple[int, int]:
+        """Tight [lo, hi] range of the expression when each variable ranges
+        over the inclusive interval ``bounds[name]`` — exact for affine
+        expressions over independent variables.  Raises ``KeyError`` for a
+        variable with no bound (callers report it as an unbound iv)."""
+        lo = hi = self.const
+        for n, c in self.coeffs.items():
+            a, b = bounds[n]
+            lo += c * (a if c > 0 else b)
+            hi += c * (b if c > 0 else a)
+        return lo, hi
 
 
 def aff(x: Union[int, str, AffExpr]) -> AffExpr:

@@ -25,7 +25,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 
 from .autotune import compile_program
-from .ir import ProgramBuilder, iv
+from .ir import ProgramBuilder
 
 
 @dataclass

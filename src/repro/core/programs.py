@@ -36,9 +36,9 @@ _PRESETS = {
 
 def fig3_conv1d() -> Program:
     b = ProgramBuilder("fig3_conv1d")
-    b.array("A", (16,), ports=("w", "r"))
-    b.array("B", (17,), ports=("r",))
-    b.array("W", (2,), ports=("r",))
+    b.array("A", (16,), ports=("w", "r"), is_arg=True)
+    b.array("B", (17,), ports=("r",), is_arg=True)
+    b.array("W", (2,), ports=("r",), is_arg=True)
     with b.loop("i", 0, 16) as i:
         with b.loop("j", 0, 2) as j:
             acc = b.load("A", i)

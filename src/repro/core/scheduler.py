@@ -16,7 +16,7 @@ descent (exact LP via our simplex for small programs).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 import numpy as np

@@ -17,7 +17,6 @@ passes on randomly generated affine programs.
 from __future__ import annotations
 
 import bisect
-import itertools
 from collections import defaultdict
 
 import numpy as np

@@ -13,8 +13,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import ShapeConfig, get_config
-from repro.models import api, lm
+from repro.config import get_config
+from repro.models import lm
 
 
 def prefill_into_cache(cfg, params, tokens, cache):

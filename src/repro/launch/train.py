@@ -10,12 +10,10 @@ the same one the dry-run compiles for 256/512 chips.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.config import ShapeConfig, get_config
 from repro.data import SyntheticLMData, make_train_iterator

@@ -7,8 +7,6 @@ columns on the "model" axis, batch on "data"/"pod", experts on "model").
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,6 @@ Three entry points per architecture:
 """
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
 
 import jax

@@ -9,7 +9,6 @@ resources and the scheduler proves an II=1 pipelined schedule exists.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,6 @@ Works on any mesh axis; tested against the unpipelined reference on an
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

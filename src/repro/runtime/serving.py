@@ -19,7 +19,6 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

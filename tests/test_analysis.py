@@ -1,0 +1,480 @@
+"""The independent static verifier (DESIGN.md §12): IR linter goldens,
+schedule translation validation, and the validator mutation-kill property.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import api as hls
+from repro.core import programs as P
+from repro.core.analysis import (EXPECTED_LINT, LINT_CODES, VALIDATE_CODES,
+                                 corpus_programs, corrupt_schedule, lint,
+                                 main as analysis_main, validate_static)
+from repro.core.errors import Diagnostic, StaticValidationError
+from repro.core.ir import (AffExpr, ArithOp, ArrayDecl, LoadOp, Loop, Program,
+                           ProgramBuilder, StoreOp, iv)
+
+
+def codes(diags):
+    return {d.code for d in diags}
+
+
+# ---------------------------------------------------------------------------
+# Level 1: linter negative-case goldens (exact Diagnostic.code matches)
+# ---------------------------------------------------------------------------
+
+
+def _simple(name="t", shape=(8,), **kw):
+    b = ProgramBuilder(name)
+    b.array("A", shape, is_arg=True, **kw)
+    b.array("C", shape, is_arg=True)
+    return b
+
+
+def test_lint_clean_program():
+    b = _simple()
+    with b.loop("i", 0, 8) as i:
+        x = b.load("A", i)
+        b.store("C", b.add(x, x), i)
+    assert lint(b.build()) == []
+
+
+def test_lint_oob_read_and_write():
+    b = _simple(shape=(8,))
+    with b.loop("i", 0, 8) as i:
+        x = b.load("A", i + 1)        # reaches 8
+        b.store("C", b.add(x, x), i - 1)  # reaches -1
+    got = lint(b.build())
+    assert codes(got) == {"oob-read", "oob-write"}
+    assert all(d.severity == "error" for d in got)
+
+
+def test_lint_oob_shifted_core():
+    # the fusion-shift idiom: a shifted core reading a halo that is not there
+    b = _simple(shape=(8, 8))
+    with b.loop("i", 0, 8) as i:
+        with b.loop("j", 0, 8) as j:
+            x = b.load("A", i + 1, j)  # row halo missing: i+1 reaches 8
+            b.store("C", b.add(x, x), i, j)
+    assert codes(lint(b.build())) == {"oob-read"}
+
+
+def test_lint_rank_mismatch_and_unknown_array():
+    p = Program("t", arrays={"A": ArrayDecl("A", (4, 4), is_arg=True)})
+    lp = Loop(ivname="i", lb=0, ub=4)
+    lp.body = [LoadOp(result="x", array="A", index=(iv("i"),)),
+               LoadOp(result="y", array="nope", index=(iv("i"),))]
+    p.body = [lp]
+    assert codes(lint(p)) >= {"rank-mismatch", "unknown-array"}
+
+
+def test_lint_unbound_iv():
+    p = Program("t", arrays={"A": ArrayDecl("A", (4,), is_arg=True)})
+    lp = Loop(ivname="i", lb=0, ub=4)
+    lp.body = [LoadOp(result="x", array="A", index=(iv("k"),))]
+    p.body = [lp]
+    assert codes(lint(p)) == {"unbound-iv"}
+
+
+def test_lint_liveness_codes():
+    b = ProgramBuilder("t")
+    b.array("src", (8,), is_arg=True)
+    b.array("ghost", (8,))      # read, never written
+    b.array("sink", (8,))       # written, never read
+    b.array("idle", (8,))       # never touched
+    with b.loop("i", 0, 8) as i:
+        x = b.load("src", i)
+        g = b.load("ghost", i)
+        b.store("sink", b.add(x, g), i)
+    got = lint(b.build())
+    by = {d.code: d for d in got}
+    assert set(by) == {"read-uninitialized", "never-read", "unused-array"}
+    assert by["read-uninitialized"].severity == "error"
+    assert by["never-read"].severity == "warning"
+
+
+def test_lint_use_before_def_across_tasks():
+    b = ProgramBuilder("t")
+    b.array("out", (8,), is_arg=True)
+    b.array("tmp", (8,))
+    with b.loop("i", 0, 8) as i:       # consumer first...
+        x = b.load("tmp", i)
+        b.store("out", b.add(x, x), i)
+    with b.loop("j", 0, 8) as j:       # ...producer second
+        y = b.load("out", j)
+        b.store("tmp", b.add(y, y), j)
+    assert "use-before-def" in codes(lint(b.build()))
+
+
+def test_lint_multi_writer():
+    b = ProgramBuilder("t")
+    b.array("src", (8,), is_arg=True)
+    b.array("dst", (8,), is_arg=True)
+    for ivn in ("i", "j"):
+        with b.loop(ivn, 0, 8) as k:
+            x = b.load("src", k)
+            b.store("dst", b.add(x, x), k)
+    assert "multi-writer" in codes(lint(b.build()))
+
+
+def test_lint_recurrence_writer_is_not_multi_writer():
+    # init nest + scan nest both write the carry — the scan also reads it,
+    # which is a recurrence, not a dataflow multi-producer hazard
+    b = ProgramBuilder("t")
+    b.array("src", (8,), is_arg=True)
+    b.array("carry", (8,), is_arg=True)
+    with b.loop("i", 0, 8) as i:
+        z = b.load("src", i)
+        b.store("carry", b.add(z, z), i)
+    with b.loop("j", 0, 8) as j:
+        c = b.load("carry", j)
+        s = b.load("src", j)
+        b.store("carry", b.add(c, s), j)
+    assert "multi-writer" not in codes(lint(b.build()))
+
+
+def test_lint_pragma_codes():
+    p = Program("t", arrays={
+        "A": ArrayDecl("A", (4,), is_arg=True, partition=(1,))})
+    bad_ii = Loop(ivname="i", lb=0, ub=4, ii=0)
+    bad_ii.body = [LoadOp(result="x", array="A", index=(iv("i"),))]
+    nz = Loop(ivname="j", lb=2, ub=6)
+    nz.body = [LoadOp(result="y", array="A", index=(AffExpr({"j": 1}, -2),))]
+    tile = Loop(ivname="k_t", lb=0, ub=2, tile_block=3)  # inner trip != 3
+    inner = Loop(ivname="k_b", lb=0, ub=2)
+    inner.body = [LoadOp(result="z", array="A", index=(iv("k_b"),))]
+    tile.body = [inner]
+    peel = Loop(ivname="m", lb=0, ub=1, peel=True)
+    peel.body = [LoadOp(result="w", array="A", index=(iv("m"),))]
+    p.body = [bad_ii, nz, tile, peel]
+    got = codes(lint(p))
+    assert {"bad-ii", "nonzero-base", "tile-marker", "orphan-peel",
+            "partition-dim"} <= got
+
+
+def test_lint_ssa_scope_and_unknown_fn():
+    # a sibling loop's def is invisible (sim's env copy semantics)
+    p = Program("t", arrays={"A": ArrayDecl("A", (4,), is_arg=True)})
+    l1 = Loop(ivname="i", lb=0, ub=4)
+    l1.body = [LoadOp(result="x", array="A", index=(iv("i"),))]
+    l2 = Loop(ivname="j", lb=0, ub=4)
+    l2.body = [ArithOp(result="y", fn="add", args=("x", "x")),
+               ArithOp(result="z", fn="sqrt", args=("y", "y")),
+               StoreOp(array="A", index=(iv("j"),), value="z")]
+    p.body = [l1, l2]
+    got = codes(lint(p))
+    assert {"undef-ssa", "unknown-fn"} <= got
+
+
+def test_lint_missing_port():
+    b = ProgramBuilder("t")
+    b.array("ro", (8,), is_arg=True, ports=("r",))
+    with b.loop("i", 0, 8) as i:
+        x = b.load("ro", i)
+        b.store("ro", b.add(x, x), i)
+    assert "missing-port" in codes(lint(b.build()))
+
+
+def test_lint_is_stable_sorted():
+    b = _simple(shape=(8,))
+    b.array("dead", (8,))
+    with b.loop("i", 0, 8) as i:
+        x = b.load("A", i + 1)
+        b.store("C", b.add(x, x), i)
+        b.store("dead", x, i)
+    got = lint(b.build())
+    assert got == sorted(got, key=Diagnostic.sort_key)
+    assert [d.severity for d in got] == sorted(
+        [d.severity for d in got], key=lambda s: s != "error")
+
+
+def test_every_emitted_code_is_documented():
+    assert set(LINT_CODES) >= {
+        "oob-read", "oob-write", "use-before-def", "never-read",
+        "multi-writer", "tile-marker", "partition-dim", "undef-ssa"}
+    assert set(VALIDATE_CODES) >= {
+        "dep-violated", "port-conflict", "occupancy", "ssa-order",
+        "unresolved"}
+
+
+# ---------------------------------------------------------------------------
+# Corpus: the linter runs clean (or matches pinned goldens)
+# ---------------------------------------------------------------------------
+
+
+def test_corpus_lints_clean():
+    for name, ctor in corpus_programs(include_traced=False).items():
+        errors = {d.code for d in lint(ctor())
+                  if d.severity == "error"} - EXPECTED_LINT.get(name, set())
+        assert not errors, f"{name}: unexpected lint errors {errors}"
+
+
+def test_cli_smoke(capsys):
+    assert analysis_main(["fig3_conv1d", "blur_chain", "--no-traced"]) == 0
+    out = capsys.readouterr().out
+    assert "fig3_conv1d: ok" in out and "blur_chain: ok" in out
+    assert analysis_main(["--codes"]) == 0
+
+
+# ---------------------------------------------------------------------------
+# Level 2: schedule translation validation
+# ---------------------------------------------------------------------------
+
+GOLDEN = {
+    "blur_chain": lambda: P.blur_chain(n=8),
+    "conv_pool": lambda: P.conv_pool(n=8),
+    "gradient_harris": lambda: P.gradient_harris(n=8),
+    "correlated_chain": lambda: P.correlated_chain(n=8),
+    "harris": lambda: P.harris(n=8),
+    "optical_flow": lambda: P.optical_flow(n=8),
+    "two_mm": lambda: P.two_mm(m=6),
+}
+
+
+@pytest.mark.parametrize("name", sorted(GOLDEN))
+def test_golden_schedules_accepted(name):
+    p = GOLDEN[name]()
+    s = hls.compile(p, pipeline=()).best.schedule
+    v = validate_static(s.program, s)
+    assert v.ok, f"{name}: {[str(d) for d in v.diagnostics]}"
+    assert v.pairs > 0
+
+
+@pytest.mark.parametrize("pipeline", ["fuse", "fuse,partition"])
+def test_transformed_golden_accepted(pipeline):
+    p = P.blur_chain(n=8)
+    r = hls.compile(p, pipeline=pipeline)
+    s = r.best.schedule
+    v = validate_static(s.program, s)
+    assert v.ok, [str(d) for d in v.diagnostics]
+
+
+@pytest.mark.slow
+@pytest.mark.timeout(1200)
+def test_dse_winners_accepted_full():
+    for name, ctor in GOLDEN.items():
+        r = hls.compile(ctor())
+        s = r.best.schedule
+        v = validate_static(s.program, s)
+        assert v.ok, f"{name}: {[str(d) for d in v.diagnostics]}"
+
+
+def test_validator_catches_theta_violation():
+    p = P.blur_chain(n=8)
+    s = hls.compile(p, pipeline=()).best.schedule
+    e = next(e for e in s.edges if e.kind == "RAW")
+    theta = dict(s.theta)
+    theta[e.snk] = theta[e.src] + e.lower - 1
+    mut = dataclasses.replace(s, theta=theta)
+    v = validate_static(mut.program, mut)
+    assert not v.ok
+    assert codes(v.diagnostics) & {"dep-violated", "ssa-order",
+                                   "struct-order"}
+
+
+def test_validator_catches_occupancy():
+    p = P.two_mm(m=6)
+    s = hls.compile(p, pipeline=()).best.schedule
+    nested = next(l for l in s.program.loops() if l.sub_loops())
+    iis = dict(s.iis)
+    iis[nested.uid] = 1  # below trip(inner) * II(inner)
+    mut = dataclasses.replace(s, iis=iis)
+    v = validate_static(mut.program, mut, fail_fast=True)
+    assert not v.ok
+    assert "occupancy" in codes(v.diagnostics)
+
+
+def test_validator_catches_port_conflict():
+    b = ProgramBuilder("t")
+    b.array("B", (16,), is_arg=True)           # one read port
+    b.array("C", (16,), is_arg=True)
+    with b.loop("i", 0, 16) as i:
+        x = b.load("B", i)
+        y = b.load("B", i)
+        b.store("C", b.add(x, y), i)
+    p = b.build()
+    s = hls.compile(p, pipeline=()).best.schedule
+    assert validate_static(s.program, s).ok     # real schedule staggers them
+    ld = [op for op, _ in s.program.walk() if isinstance(op, LoadOp)]
+    theta = dict(s.theta)
+    theta[ld[1].uid] = theta[ld[0].uid]         # same port, same cycle
+    mut = dataclasses.replace(s, theta=theta)
+    v = validate_static(mut.program, mut)
+    assert "port-conflict" in codes(v.diagnostics)
+
+
+def test_validator_missing_keys():
+    p = P.two_mm(m=6)
+    s = hls.compile(p, pipeline=()).best.schedule
+    iis = dict(s.iis)
+    iis.pop(next(iter(iis)))
+    v = validate_static(p, dataclasses.replace(s, iis=iis))
+    assert "missing-ii" in codes(v.diagnostics)
+    theta = dict(s.theta)
+    theta.pop(next(iter(theta)))
+    v = validate_static(p, dataclasses.replace(s, theta=theta))
+    assert "missing-theta" in codes(v.diagnostics)
+
+
+# ---------------------------------------------------------------------------
+# The mutation-kill property: >= 50 seeded corruptions per chain, all
+# rejected; the uncorrupted schedule always accepted.
+# ---------------------------------------------------------------------------
+
+CHAINS = ["blur_chain", "conv_pool", "gradient_harris", "correlated_chain"]
+
+
+@pytest.mark.parametrize("name", CHAINS)
+def test_mutation_kill(name):
+    p = GOLDEN[name]()
+    s = hls.compile(p, pipeline=()).best.schedule
+    assert s.provenance == "exact"
+    assert validate_static(s.program, s).ok
+    rng = np.random.default_rng(0xC0FFEE + CHAINS.index(name))
+    killed = tries = 0
+    while killed < 50:
+        tries += 1
+        assert tries < 500, f"mutator starved after {killed} mutants"
+        made = corrupt_schedule(s, rng)
+        if made is None:
+            continue
+        mut, info = made
+        v = validate_static(mut.program, mut, fail_fast=True)
+        assert not v.ok, f"{name}: validator accepted mutant {info}"
+        killed += 1
+
+
+def test_corrupt_schedule_requires_exact_provenance():
+    p = P.blur_chain(n=8)
+    s = hls.compile(p, pipeline=()).best.schedule
+    degraded = dataclasses.replace(s, provenance="degraded")
+    with pytest.raises(ValueError):
+        corrupt_schedule(degraded, np.random.default_rng(0))
+
+
+# ---------------------------------------------------------------------------
+# Independence: the validator must not lean on deps.py's analysis
+# ---------------------------------------------------------------------------
+
+
+def test_validator_is_independent_of_deps():
+    import ast
+    import inspect
+
+    from repro.core import analysis
+    src = inspect.getsource(analysis)
+    tree = ast.parse(src)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom):
+            assert (node.module or "").split(".")[-1] != "deps", \
+                "analysis.py imports deps.py"
+        if isinstance(node, ast.Import):
+            assert all("deps" not in (a.name or "") for a in node.names)
+    for forbidden in ("_fast_slack_case", "_solve_separable",
+                      "_min_diophantine_2var", "DepAnalysis",
+                      "collect_accesses"):
+        assert forbidden not in src
+
+
+# ---------------------------------------------------------------------------
+# hls.compile wiring
+# ---------------------------------------------------------------------------
+
+
+def test_compile_reports_lint_diagnostics():
+    b = ProgramBuilder("t")
+    b.array("src", (8,), is_arg=True)
+    b.array("dead", (8,))
+    with b.loop("i", 0, 8) as i:
+        x = b.load("src", i)
+        b.store("dead", x, i)
+    r = hls.compile(b.build(), pipeline=())
+    lints = [d for d in r.diagnostics if d.get("kind") == "lint"]
+    assert any(d["code"] == "never-read" for d in lints)
+    assert not r.degraded  # warnings do not degrade provenance
+
+
+def test_compile_lint_opt_out():
+    b = ProgramBuilder("t")
+    b.array("src", (8,), is_arg=True)
+    b.array("dead", (8,))
+    with b.loop("i", 0, 8) as i:
+        b.store("dead", b.load("src", i), i)
+    r = hls.compile(b.build(), pipeline=(),
+                    search=hls.SearchConfig(lint=False))
+    assert not any(d.get("kind") == "lint" for d in r.diagnostics)
+
+
+def test_compile_winner_is_validated(monkeypatch):
+    calls = []
+    from repro.core import analysis
+
+    real = analysis.validate_static
+
+    def spy(p, s, **kw):
+        calls.append(p.name)
+        return real(p, s, **kw)
+
+    monkeypatch.setattr(analysis, "validate_static", spy)
+    hls.compile(P.blur_chain(n=8), pipeline=())
+    assert calls == ["blur_chain"]
+    calls.clear()
+    hls.compile(P.blur_chain(n=8), pipeline=(),
+                search=hls.SearchConfig(static_check=False))
+    assert calls == []
+
+
+def test_compile_raises_on_proven_violation(monkeypatch):
+    from repro.core import analysis, scheduler
+
+    real = scheduler.schedule
+
+    def sabotage(p, iis, dep, minimize_registers=True):
+        s = real(p, iis, dep, minimize_registers=minimize_registers)
+        if s.feasible and s.edges:
+            e = max(s.edges, key=lambda e: e.lower)
+            theta = dict(s.theta)
+            theta[e.snk] = theta[e.src] + e.lower - 1
+            s = dataclasses.replace(s, theta=theta)
+        return s
+
+    import sys
+    # the package re-exports the autotune *function*, shadowing the module
+    # attribute — go through sys.modules for the module itself
+    monkeypatch.setattr(sys.modules["repro.core.autotune"], "schedule",
+                        sabotage)
+    with pytest.raises(StaticValidationError) as ei:
+        hls.compile(P.blur_chain(n=8), pipeline=())
+    assert ei.value.verdict.violations
+
+
+# ---------------------------------------------------------------------------
+# Diagnostics dedupe + stable explain() (the aggregation bugfix)
+# ---------------------------------------------------------------------------
+
+
+def test_dedupe_diagnostics():
+    from repro.core.autotune import dedupe_diagnostics
+    a = {"kind": "solver-degraded", "src": 1, "snk": 2, "carry": 0,
+         "candidate": "tile(4)"}
+    b = {"kind": "solver-degraded", "src": 1, "snk": 2, "carry": 0,
+         "candidate": "fuse"}
+    c = {"kind": "worker-retry", "attempt": 1}
+    got = dedupe_diagnostics([a, b, c, dict(c)])
+    assert len(got) == 2
+    assert got[0]["count"] == 2 and got[0]["candidate"] == "tile(4)"
+    assert got[1]["kind"] == "worker-retry" and got[1]["count"] == 2
+
+
+def test_explain_stable_order():
+    r = hls.compile(P.blur_chain(n=8), pipeline=())
+    extra = [{"kind": "solver-degraded", "src": 9, "snk": 10, "carry": 1,
+              "slack_bound": 0},
+             {"kind": "solver-degraded", "src": 3, "snk": 4, "carry": 0,
+              "slack_bound": 1}]
+    r.diagnostics.extend(extra)
+    text1 = r.explain()
+    r.diagnostics[-2:] = [extra[1], extra[0]]  # reversed arrival order
+    assert r.explain() == text1
+    assert text1.index("(3, 4)") < text1.index("(9, 10)")

@@ -16,13 +16,11 @@ jax = pytest.importorskip("jax")
 from jax.experimental import enable_x64  # noqa: E402
 
 from repro.core import sim  # noqa: E402
-from repro.core.codegen import (DEFAULT_BLOCK_ROWS, PallasKernel,  # noqa: E402
-                                lower_program)
+from repro.core.codegen import PallasKernel, lower_program  # noqa: E402
 from repro.core.errors import UnlowerableProgram  # noqa: E402
 from repro.core.ir import ProgramBuilder  # noqa: E402
 from repro.core.programs import (BENCHMARKS, CHAIN_BENCHMARKS,  # noqa: E402
-                                 blur_chain, fig1_conv_chain, fig3_conv1d,
-                                 two_mm)
+                                 blur_chain, fig1_conv_chain, fig3_conv1d)
 from repro.core.transforms import (FuseProducerConsumer, LoopTile,  # noqa: E402
                                    Normalize, PassManager)
 

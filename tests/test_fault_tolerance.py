@@ -47,7 +47,6 @@ def test_restart_limit(tmp_path):
 def test_watchdog_flags_stragglers():
     fired = []
     wd = StepWatchdog(100.0, lambda: fired.append(1))
-    import time
     for _ in range(8):
         wd.start_step()
         wd.end_step()

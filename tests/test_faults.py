@@ -15,7 +15,6 @@ import importlib
 import json
 import os
 
-import numpy as np
 import pytest
 
 from repro.core import (CacheFault, CompileError, DepAnalysis,

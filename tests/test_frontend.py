@@ -15,7 +15,6 @@ jax = pytest.importorskip("jax")
 import jax.numpy as jnp  # noqa: E402
 
 from repro.core import hls  # noqa: E402
-from repro.core import frontend  # noqa: E402
 from repro.core.errors import UntraceableFunction  # noqa: E402
 from repro.core.frontend import (TracedProgram, attention_program,  # noqa: E402
                                  conv_block_program, trace, wkv6_program)

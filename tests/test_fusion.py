@@ -26,8 +26,7 @@ from repro.core.ir import ProgramBuilder
 from repro.core.programs import CHAIN_BENCHMARKS
 from repro.core.sim import (make_inputs, sequential_exec, timed_exec,
                             validate_schedule)
-from repro.core.transforms import (FuseProducerConsumer, PassManager,
-                                   differential_check)
+from repro.core.transforms import FuseProducerConsumer, PassManager
 
 _SMALL = {"blur_chain": 8, "conv_pool": 8, "gradient_harris": 6,
           "correlated_chain": 8}

@@ -2,7 +2,6 @@
 trip-count recovery on scanned modules."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.launch import hlo_analysis as ha
 

@@ -1,6 +1,5 @@
 """Unit tests for the numpy simplex / branch-and-bound ILP solver."""
 import numpy as np
-import pytest
 
 from repro.core.ilp import brute_force_ilp, solve_ilp, solve_lp
 

@@ -1,5 +1,4 @@
 """The ILP scheduler applied to pipeline parallelism + overlap planning."""
-import pytest
 
 from repro.core import overlap, pipeline_ilp as pp
 

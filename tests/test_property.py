@@ -14,7 +14,7 @@ import numpy as np
 import pytest
 
 from repro.core.autotune import compile_program
-from repro.core.ir import ProgramBuilder, iv
+from repro.core.ir import ProgramBuilder
 from repro.core.scheduler import check_loop_occupancy
 from repro.core.sim import (make_inputs, sequential_exec, timed_exec,
                             validate_schedule)
